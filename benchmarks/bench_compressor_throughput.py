@@ -1,0 +1,40 @@
+"""Compression-kernel throughput: Pallas (interpret) vs pure-jnp oracle vs
+exact rank-based Top_k, across gradient sizes.  On real TPU hardware the
+pallas_call path is the deployed one; interpret mode numbers here are
+correctness-weighted, not perf claims (noted in EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressor import top_k
+from repro.kernels import lgc_compress_hist, lgc_compress_hist_ref
+from .common import emit, time_call
+
+
+def run(sizes=(65_536, 1_048_576), emit_csv: bool = True) -> dict:
+    out = {}
+    for d in sizes:
+        key = jax.random.PRNGKey(d)
+        e = jnp.zeros((d,), jnp.float32)
+        delta = jax.random.normal(key, (d,))
+        cum_ks = jnp.array([d // 100, d // 100 + d // 50], jnp.int32)
+        recv = jnp.ones((2,), jnp.int32)
+
+        us_ref = time_call(lgc_compress_hist_ref, e, delta, cum_ks, recv,
+                           iters=3)
+        us_pallas = time_call(
+            lambda *a: lgc_compress_hist(*a), e, delta, cum_ks, recv, iters=3)
+        us_exact = time_call(
+            jax.jit(lambda x: top_k(x, d // 50 + d // 100)), delta, iters=3)
+        out[d] = {"hist_ref_us": us_ref, "hist_pallas_interp_us": us_pallas,
+                  "exact_topk_us": us_exact}
+        if emit_csv:
+            emit(f"compressor_hist_ref_d{d}", us_ref,
+                 f"exact_topk_us={us_exact:.0f}")
+            emit(f"compressor_pallas_interp_d{d}", us_pallas, "")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Theorem 1 / Corollary 1: tabulate the theoretical bound vs T, H, gamma --
+the paper's convergence-guarantee section as a runnable artifact."""
+from __future__ import annotations
+
+import time
+
+from repro.core import ProblemConstants, corollary1_rate, theorem1_bound
+from .common import emit
+
+
+def run(emit_csv: bool = True) -> dict:
+    base = ProblemConstants(mu=0.5, l_smooth=4.0, g2=25.0, sigma2=4.0,
+                            b=64, m=3, gamma=0.05, h=4, w0_dist2=10.0)
+    out = {}
+    t0 = time.time()
+    for t_rounds in (500, 2000, 8000):
+        out[f"T{t_rounds}"] = {
+            "theorem1": theorem1_bound(base, t_rounds),
+            "corollary1": corollary1_rate(base, t_rounds)}
+    import dataclasses
+    for h in (2, 8, 16):
+        c = dataclasses.replace(base, h=h)
+        out[f"H{h}"] = {"theorem1": theorem1_bound(c, 2000)}
+    dt = (time.time() - t0) * 1e6 / 6
+    if emit_csv:
+        emit("convergence_bound", dt,
+             ";".join(f"{k}={v['theorem1']:.3g}" for k, v in out.items()
+                      if "theorem1" in v))
+    return out
+
+
+if __name__ == "__main__":
+    run()

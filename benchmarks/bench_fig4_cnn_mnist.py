@@ -1,0 +1,22 @@
+"""Paper Figure 4: CNN on MNIST -- convergence + resources vs baselines."""
+from __future__ import annotations
+
+import argparse
+import json
+
+from .bench_fig3_lr_mnist import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    res = run(model="cnn", rounds=args.rounds, n_train=2000)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Paper Figure 5: DRL (DDPG) training curves -- critic loss down, reward up.
+
+Runs the DDPG agents against the LR/MNIST FL environment and reports the
+slope of the reward and critic-loss sequences.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+import jax
+
+from repro.core import FLConfig, LGCSimulator, tree_size
+from repro.core.controller import make_ddpg_controllers
+from repro.models.paper_models import make_mnist_task
+
+from .common import emit
+
+
+def _slope(xs) -> float:
+    if len(xs) < 3:
+        return 0.0
+    t = np.arange(len(xs), dtype=np.float64)
+    return float(np.polyfit(t, np.asarray(xs, np.float64), 1)[0])
+
+
+def run(rounds: int = 200, emit_csv: bool = True) -> dict:
+    task = make_mnist_task("lr", m_devices=3, n_train=2000)
+    d = tree_size(task.init(jax.random.PRNGKey(0)))
+    ctrls = make_ddpg_controllers(3, d)
+    cfg = FLConfig(rounds=rounds, eval_every=max(rounds // 8, 1))
+    t0 = time.time()
+    LGCSimulator(task, cfg, ctrls, mode="lgc").run()
+    dt = time.time() - t0
+    rewards = [float(r) for c in ctrls for r in c.rewards]
+    closses = [float(l) for c in ctrls for l in c.critic_losses]
+    # windowed means (the paper's per-episode curves)
+    w = max(len(rewards) // 8, 1)
+    reward_curve = [float(np.mean(rewards[i:i + w]))
+                    for i in range(0, len(rewards), w)]
+    loss_curve = [float(np.mean(closses[i:i + w]))
+                  for i in range(0, len(closses), w)] if closses else []
+    out = {"rewards": rewards, "critic_losses": closses,
+           "reward_curve": reward_curve, "critic_loss_curve": loss_curve,
+           "reward_slope": _slope(reward_curve),
+           "critic_loss_slope": _slope(loss_curve)}
+    if emit_csv:
+        emit("fig5_drl", dt * 1e6 / rounds,
+             f"n_rewards={len(rewards)};reward_slope={out['reward_slope']:.4f};"
+             f"critic_loss_slope={out['critic_loss_slope']:.4f}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    res = run(rounds=args.rounds)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

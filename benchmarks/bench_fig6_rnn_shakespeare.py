@@ -1,0 +1,54 @@
+"""Paper Figure 6: char-RNN on Shakespeare -- convergence + resources."""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.core import FLConfig, LGCSimulator, run_baseline, tree_size
+from repro.core.controller import make_ddpg_controllers
+from repro.models.paper_models import make_shakespeare_task
+
+from .common import emit
+
+
+def run(rounds: int = 60, emit_csv: bool = True) -> dict:
+    task = make_shakespeare_task(m_devices=3, seq=48)
+    cfg = FLConfig(rounds=rounds, eval_every=max(rounds // 6, 1),
+                   batch_size=32)
+    out = {}
+    for mode, label in (("lgc", "lgc_fixed"), ("fedavg", "fedavg")):
+        t0 = time.time()
+        h = run_baseline(task, cfg, mode, h=4)
+        out[label] = h.asdict()
+        if emit_csv:
+            emit(f"fig6_rnn_{label}", (time.time() - t0) * 1e6 / rounds,
+                 f"acc={h.accuracy[-1]:.3f};loss={h.loss[-1]:.3f};"
+                 f"energy_j={h.energy_j[-1]:.0f};money={h.money[-1]:.4f}")
+    d = tree_size(task.init(jax.random.PRNGKey(0)))
+    ctrls = make_ddpg_controllers(3, d)
+    t0 = time.time()
+    h = LGCSimulator(task, cfg, ctrls, mode="lgc").run()
+    out["lgc_ddpg"] = h.asdict()
+    if emit_csv:
+        emit(f"fig6_rnn_lgc_ddpg", (time.time() - t0) * 1e6 / rounds,
+             f"acc={h.accuracy[-1]:.3f};loss={h.loss[-1]:.3f};"
+             f"energy_j={h.energy_j[-1]:.0f};money={h.money[-1]:.4f}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    res = run(rounds=args.rounds)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

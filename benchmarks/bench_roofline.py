@@ -1,0 +1,66 @@
+"""Roofline table formatter: reads the dry-run JSONL files and emits the
+EXPERIMENTS.md §Roofline markdown table + CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.bench_roofline \
+      --jsonl results_singlepod.jsonl --markdown
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from .common import emit
+
+
+def load(paths):
+    rows = []
+    for p in paths:
+        with open(p) as f:
+            for line in f:
+                rows.append(json.loads(line))
+    return rows
+
+
+def fmt_row(r) -> str:
+    ms = lambda t: f"{t*1e3:.2f}"
+    fix = ""
+    total_mem = r["memory_args_gb"] + r["memory_temp_gb"]
+    one_sentence = {
+        "compute": "raise MXU utilisation (larger fused matmul tiles, "
+                   "less remat recompute)",
+        "memory": "cut HBM traffic: flash-style attention (no materialised "
+                  "probs), bf16 intermediates, fewer converts",
+        "collective": "reshard to cut all-gathers (expert-parallel a2a / "
+                      "head-aligned layouts) or overlap with compute",
+    }[r["bottleneck"]]
+    return (f"| {r['arch']} | {r['shape']} | {r['mode']} | "
+            f"{ms(r['t_compute'])} | {ms(r['t_memory'])} | "
+            f"{ms(r['t_collective'])} | **{r['bottleneck']}** | "
+            f"{r['model_flops_total']:.3g} | {r['useful_ratio']:.3f} | "
+            f"{total_mem:.1f} | {one_sentence} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jsonl", nargs="+",
+                    default=["results_singlepod.jsonl"])
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.jsonl)
+    if args.markdown:
+        print("| arch | shape | mode | Tc (ms) | Tm (ms) | Tcoll (ms) | "
+              "dominant | MODEL_FLOPS | useful | mem GB | next lever |")
+        print("|---|---|---|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            print(fmt_row(r))
+    else:
+        for r in rows:
+            emit(f"roofline_{r['arch']}_{r['shape']}_{r['mode']}",
+                 r["t_compute"] * 1e6,
+                 f"tm_us={r['t_memory']*1e6:.0f};"
+                 f"tcoll_us={r['t_collective']*1e6:.0f};"
+                 f"dom={r['bottleneck']};useful={r['useful_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Benchmark orchestrator: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (harness contract).  Reduced
+budgets so the whole suite finishes in minutes on CPU; each bench_* module
+has a __main__ with --rounds/--out for the full curves used in
+EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import (bench_compressor_throughput,
+                            bench_convergence_bound, bench_fig3_lr_mnist,
+                            bench_fig5_drl, bench_fig6_rnn_shakespeare,
+                            bench_table1_channels)
+
+    bench_table1_channels.run()                                  # Table 1
+    bench_convergence_bound.run()                                # Thm 1
+    bench_compressor_throughput.run(sizes=(65_536,))             # kernels
+    bench_fig3_lr_mnist.run(model="lr", rounds=100, n_train=2000)   # Fig 3
+    bench_fig3_lr_mnist.run(model="cnn", rounds=40, n_train=1500)   # Fig 4
+    bench_fig5_drl.run(rounds=120)                               # Fig 5
+    bench_fig6_rnn_shakespeare.run(rounds=30)                    # Fig 6
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,40 @@
+"""Quickstart: LGC federated learning in ~40 lines.
+
+Trains logistic regression on synthetic MNIST across 3 edge devices with
+3 channels (3G/4G/5G), layered gradient compression and error feedback,
+and compares resource usage against FedAvg.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import FLConfig, run_baseline
+from repro.models.paper_models import make_mnist_task
+
+
+def main():
+    task = make_mnist_task("lr", m_devices=3, n_train=3000)
+    cfg = FLConfig(rounds=120, eval_every=20)
+
+    print("== LGC (layered compression, 3 channels, fixed H=4) ==")
+    lgc = run_baseline(task, cfg, "lgc", h=4)
+    for step, loss, acc in zip(lgc.step, lgc.loss, lgc.accuracy):
+        print(f"  t={step:4d} loss={loss:.4f} acc={acc:.3f}")
+
+    print("== FedAvg (dense upload) ==")
+    avg = run_baseline(task, cfg, "fedavg", h=4)
+    print(f"  final loss={avg.loss[-1]:.4f} acc={avg.accuracy[-1]:.3f}")
+
+    print("\n== resource comparison (total across devices) ==")
+    rows = [("", "LGC", "FedAvg"),
+            ("energy (J)", f"{lgc.energy_j[-1]:.0f}", f"{avg.energy_j[-1]:.0f}"),
+            ("money", f"{lgc.money[-1]:.4f}", f"{avg.money[-1]:.4f}"),
+            ("uplink (MB)", f"{lgc.uplink_mb[-1]:.2f}", f"{avg.uplink_mb[-1]:.2f}"),
+            ("wall time (s)", f"{lgc.time_s[-1]:.1f}", f"{avg.time_s[-1]:.1f}")]
+    for r in rows:
+        print(f"  {r[0]:>14s}  {r[1]:>10s}  {r[2]:>10s}")
+    assert lgc.energy_j[-1] < avg.energy_j[-1]
+    print("\nLGC reaches comparable accuracy at a fraction of the resource "
+          "cost (paper Fig. 3).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""End-to-end driver: train a ~100M-parameter qwen2-family model for a few
+hundred steps with LGC gradient compression across 8 simulated FL devices.
+
+This is the real training path (actual arrays, actual shard_map step --
+the same code the dry-run lowers for the production mesh), running on 8
+host devices.  Loss must decrease; the script also reports the LGC wire
+savings vs a dense exchange.
+
+  PYTHONPATH=src python examples/train_100m_lgc.py [--steps 300]
+"""
+import argparse
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.tokens import TokenPipeline
+from repro.launch import sharding_rules as rules
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import (LGCStepConfig, init_ef_tree,
+                                make_lgc_train_step)
+from repro.models import transformer as tf
+
+
+def hundred_m_config():
+    """qwen2-family scaled to ~100M params."""
+    base = get_config("qwen2-1.5b")
+    return dataclasses.replace(
+        base, name="qwen2-100m", n_layers=8, d_model=512, n_heads=8,
+        n_kv_heads=2, d_ff=2048, vocab_size=32_000, tie_embeddings=True,
+        remat=False, attn_q_chunk=128, loss_chunk=256)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    # defaults sized for the 1-core CPU container; on a real pod raise all
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--local-steps", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = hundred_m_config()
+    mesh = make_host_mesh(8, model=1)       # 8 FL devices on the data axis
+    jax.set_mesh(mesh)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"{cfg.name}: {n/1e6:.1f}M params, 8 FL devices, "
+          f"H={args.local_steps} local steps, sparsity 1%+2%+2%")
+
+    lgc = LGCStepConfig(local_steps=args.local_steps, local_lr=3e-3,
+                        sparsity=(0.01, 0.02, 0.02))
+    pipe = TokenPipeline(cfg.vocab_size, args.seq, args.batch, seed=0)
+    x0, y0 = pipe.next_batch()
+    batch0 = {"tokens": jnp.asarray(x0), "labels": jnp.asarray(y0)}
+    bspecs = rules.batch_specs(cfg, batch0, mesh)
+    pspecs = rules.param_specs(cfg, params, mesh)
+    params = rules.place(params, pspecs, mesh)
+    step = jax.jit(make_lgc_train_step(cfg, mesh, lgc, bspecs),
+                   in_shardings=(pspecs, pspecs, bspecs),
+                   donate_argnums=(0, 1))
+    ef = rules.place(init_ef_tree(params), pspecs, mesh)
+
+    t0, losses = time.time(), []
+    for i in range(args.steps):
+        x, y = pipe.next_batch()
+        params, ef, loss = step(params, ef,
+                                {"tokens": jnp.asarray(x),
+                                 "labels": jnp.asarray(y)})
+        losses.append(float(loss))
+        if i % 20 == 0 or i == args.steps - 1:
+            print(f"round {i:4d} loss {losses[-1]:.4f} "
+                  f"({time.time()-t0:.0f}s)")
+
+    dense_mb = n * 4 / 1e6
+    lgc_mb = n * sum(lgc.sparsity) * 8 / 1e6   # (val+idx) per selected coord
+    print(f"\nwire per round per device: dense {dense_mb:.1f} MB vs "
+          f"LGC {lgc_mb:.1f} MB  ({dense_mb/lgc_mb:.1f}x reduction)")
+    if args.steps >= 20:
+        assert losses[-1] < losses[0], "loss must decrease"
+    print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} over {args.steps} rounds")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,461 @@
+"""Trip-count-aware cost model over compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+scanned-layer model (all of ours -- layers, grad accumulation, attention
+chunks are lax.scan/map) is undercounted by the trip count.  This walker
+parses the post-optimization HLO text and:
+
+  * multiplies while-body costs by the loop trip count (recovered from the
+    canonical counted-loop condition ``compare(iv, constant(N)), LT``);
+  * counts dot FLOPs = 2 * prod(result) * prod(contracting dims) from the
+    instruction's shapes + ``lhs_contracting_dims`` (matmul-FLOPs convention,
+    same as MFU accounting; elementwise flops are ignored);
+  * approximates HBM bytes as operand+result buffer bytes of top-level
+    (post-fusion) instructions -- fusion internals are not double counted;
+  * sums collective bytes (result-buffer convention) per collective kind,
+    including collectives inside loop bodies.
+
+Validated against analytic 6ND in tests/test_roofline.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_SHAPE_RE = re.compile(r"(pred|bf16|f8e4m3fn|f8e5m2|[sufc]\d+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s+->")
+_INSTR = re.compile(r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s+=\s+(.*)$")
+_RHS = re.compile(r"^(\(.*?\)|\S+)\s+([\w\-]+)\(")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+
+# ops that move no bytes / are bookkeeping
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "add-dependency", "partition-id", "replica-id",
+             "iota", "rng-bit-generator", "rng", "custom-call"}
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shape_bytes(shape_str: str) -> int:
+    return sum(_shape_elems(dims) * _DTYPE_BYTES[dt]
+               for dt, dims in _SHAPE_RE.findall(shape_str))
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    operands: list[str]
+    attrs: str
+    raw: str = ""
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    # bytes by (group_size, cross_pod) -- cross_pod means the group spans
+    # devices >= 256 apart on the 512-device multi-pod mesh (the DCN link
+    # LGC compresses); used to attribute collective traffic per mesh axis.
+    coll_groups: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for k, v in other.coll.items():
+            self.coll[k] += v
+        for k, v in other.coll_groups.items():
+            self.coll_groups[k] += v
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k,
+                    defaultdict(float, {a: b * k for a, b in self.coll.items()}),
+                    defaultdict(float, {a: b * k
+                                        for a, b in self.coll_groups.items()}))
+
+    @property
+    def cross_pod_bytes(self) -> float:
+        return sum(v for (sz, xp), v in self.coll_groups.items() if xp)
+
+
+def _parse_replica_groups(attrs: str) -> tuple[int, bool]:
+    """(group_size, crosses_pod_boundary) from a collective's attributes.
+
+    Handles both the explicit ``{{0,1},{2,3}}`` form and the iota form
+    ``[G,S]<=[dims]T(perm)``.  Pod boundary = members >= 256 apart (the
+    multi-pod mesh is (2,16,16) over 512 devices, pod stride 256).
+    """
+    import numpy as np
+    m = re.search(r"source_target_pairs=\{\{(\d+),(\d+)\}", attrs)
+    if m:
+        pairs = re.findall(r"\{(\d+),(\d+)\}", attrs)
+        xp = any(abs(int(a) - int(b)) >= 256 for a, b in pairs)
+        return 2, xp
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", attrs)
+    if m:
+        g0 = [int(x) for x in m.group(1).split(",")]
+        return len(g0), (max(g0) - min(g0)) >= 256
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\]"
+                  r"(?:T\(([\d,]+)\))?", attrs)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        perm = ([int(x) for x in m.group(4).split(",")]
+                if m.group(4) else list(range(len(dims))))
+        devs = np.arange(int(np.prod(dims))).reshape(dims).transpose(perm
+                                                                     ).reshape(g, s)
+        g0 = devs[0]
+        return s, bool(g0.max() - g0.min() >= 256)
+    return 0, False
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str, collect_breakdown: bool = False):
+        self.comps: dict[str, list[Instr]] = {}
+        self.shapes: dict[str, dict[str, str]] = {}
+        self.entry: str | None = None
+        self._memo: dict[str, Cost] = {}
+        self.breakdown: dict[str, Cost] | None = \
+            defaultdict(Cost) if collect_breakdown else None
+        self._parse(hlo_text)
+
+    @staticmethod
+    def _tag(ins: Instr) -> str:
+        m = re.search(r'op_name="([^"]+)"', ins.raw)
+        return (m.group(1) if m else ins.op)[-80:]
+
+    def _note(self, ins: Instr, cost: Cost, scale: float = 1.0):
+        if self.breakdown is not None:
+            self.breakdown[self._tag(ins)] += cost.scaled(scale)
+
+    # -- parsing -----------------------------------------------------------
+    def _parse(self, text: str):
+        cur = None
+        for line in text.splitlines():
+            h = _COMP_HEADER.match(line)
+            if h and line.rstrip().endswith("{"):
+                cur = h.group(2)
+                self.comps[cur] = []
+                self.shapes[cur] = {}
+                if h.group(1):
+                    self.entry = cur
+                # parameter shapes from the header signature
+                for pname, pshape in re.findall(
+                        r"([\w.\-]+):\s+((?:\([^)]*\)|[\w\[\],{}]+))",
+                        h.group(3)):
+                    self.shapes[cur][pname] = pshape
+                continue
+            if cur is None:
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+            mi = _INSTR.match(line)
+            if not mi:
+                continue
+            is_root = line.lstrip().startswith("ROOT ")
+            name, rhs = mi.group(1), mi.group(2)
+            mr = _RHS.match(rhs)
+            if not mr:
+                continue
+            shape, op = mr.group(1), mr.group(2)
+            paren = rhs[mr.end() - 1:]
+            # operand list: up to the matching close paren (operands are flat)
+            depth, end = 0, len(paren)
+            for i, ch in enumerate(paren):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            operands = _OPERAND.findall(paren[:end + 1])
+            attrs = paren[end + 1:]
+            self.comps[cur].append(Instr(name, shape, op, operands, attrs,
+                                         raw=rhs, is_root=is_root))
+            self.shapes[cur][name] = shape
+
+    # -- helpers -----------------------------------------------------------
+    def _operand_bytes(self, comp: str, operands: list[str]) -> int:
+        tab = self.shapes[comp]
+        return sum(_shape_bytes(tab[o]) for o in operands if o in tab)
+
+    def _trip_count(self, cond_comp: str) -> int:
+        """Canonical counted loop: the s32 constant the iv is compared to.
+
+        XLA canonicalizes lax.scan/map loops to ``iv = 0; while (iv < N)``;
+        the bound N appears as an s32[] constant in the condition computation
+        (possibly inside a wrapped-compare fusion).  Falls back to 1 if no
+        bound is found (cost then matches XLA's own single-trip counting).
+        """
+        def consts_in(comp_name: str):
+            for ins in self.comps.get(comp_name, []):
+                if ins.op == "constant" and ins.shape.startswith("s32"):
+                    m = re.search(r"constant\((-?\d+)\)", ins.raw)
+                    if m:
+                        yield int(m.group(1))
+                elif ins.op in ("fusion", "call"):
+                    c = re.search(r"calls=%?([\w.\-]+)", ins.attrs)
+                    if c:
+                        yield from consts_in(c.group(1))
+        best = max(consts_in(cond_comp), default=0)
+        return best if best > 0 else 1
+
+    def _fusion_bytes(self, comp: str, ins: Instr) -> float:
+        """HBM bytes for a fusion call, slice-aware.
+
+        A fusion operand consumed ONLY by dynamic-slice/gather inside the
+        fused computation reads just the slice, not the whole buffer (the
+        scanned-layer weight stack pattern); a fusion whose root is a
+        dynamic-update-slice writes only the update.  Without this, a
+        depth-L scan appears to move L x the full stacked buffer per step
+        (L^2 total) -- off by ~30x for the 28-layer calibration model.
+        """
+        called = re.search(r"calls=%?([\w.\-]+)", ins.attrs)
+        if not called:
+            return _shape_bytes(ins.shape) + self._operand_bytes(
+                comp, ins.operands)
+        cname = called.group(1)
+        body = self.comps.get(cname, [])
+        params: dict[int, str] = {}
+        consumers: dict[str, list[Instr]] = defaultdict(list)
+        for i2 in body:
+            if i2.op == "parameter":
+                mm = re.search(r"parameter\((\d+)\)", i2.raw)
+                if mm:
+                    params[int(mm.group(1))] = i2.name
+            for o in i2.operands:
+                consumers[o].append(i2)
+
+        total = 0.0
+        tab = self.shapes[comp]
+        for i, opnd in enumerate(ins.operands):
+            full = _shape_bytes(tab.get(opnd, ""))
+            pname = params.get(i)
+            cons = consumers.get(pname, []) if pname else []
+            if cons and all(
+                    c.op in ("dynamic-slice", "gather")
+                    and c.operands and c.operands[0] == pname
+                    for c in cons):
+                total += sum(_shape_bytes(c.shape) for c in cons)
+            elif cons and all(
+                    c.op == "dynamic-update-slice"
+                    and c.operands and c.operands[0] == pname
+                    for c in cons):
+                # buffer updated in place: only the update slice moves
+                ctab = self.shapes.get(cname, {})
+                total += sum(_shape_bytes(ctab.get(c.operands[1], ""))
+                             for c in cons if len(c.operands) > 1)
+            else:
+                total += full
+        # result side
+        root = next((i2 for i2 in body if i2.is_root), None)
+        dus = [i2 for i2 in body if i2.op == "dynamic-update-slice"]
+        if dus and root is not None and root.op in (
+                "dynamic-update-slice", "bitcast", "copy", "tuple"):
+            ctab = self.shapes.get(cname, {})
+            total += sum(_shape_bytes(ctab.get(d.operands[1], ""))
+                         for d in dus if len(d.operands) > 1)
+        else:
+            total += _shape_bytes(ins.shape)
+        return total
+
+    def _generic_bytes(self, comp: str, ins: Instr) -> float:
+        """Slice-aware bytes for non-fusion top-level ops."""
+        op = ins.op
+        tab = self.shapes[comp]
+        if op == "dynamic-slice":
+            return 2.0 * _shape_bytes(ins.shape)
+        if op == "dynamic-update-slice" and len(ins.operands) > 1:
+            return 2.0 * _shape_bytes(tab.get(ins.operands[1], ""))
+        if op == "gather":
+            idx = _shape_bytes(tab.get(ins.operands[1], "")) \
+                if len(ins.operands) > 1 else 0
+            return 2.0 * _shape_bytes(ins.shape) + idx
+        if op == "scatter" and len(ins.operands) > 2:
+            return (2.0 * _shape_bytes(tab.get(ins.operands[2], ""))
+                    + _shape_bytes(tab.get(ins.operands[1], "")))
+        return _shape_bytes(ins.shape) + self._operand_bytes(
+            comp, ins.operands)
+
+    def _dot_flops(self, comp: str, ins: Instr) -> float:
+        result_elems = _shape_elems(_SHAPE_RE.search(ins.shape).group(2)) \
+            if _SHAPE_RE.search(ins.shape) else 0
+        lhs = ins.operands[0] if ins.operands else None
+        lhs_shape = self.shapes[comp].get(lhs, "")
+        lhs_dims = _shape_dims(lhs_shape)
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+        k = 1
+        if m and lhs_dims:
+            for d in m.group(1).split(","):
+                if d:
+                    k *= lhs_dims[int(d)]
+        return 2.0 * result_elems * k
+
+    # -- main recursion ------------------------------------------------------
+    def cost_of(self, comp: str) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        total = Cost()
+        self._memo[comp] = total          # guard cycles
+        for ins in self.comps.get(comp, []):
+            op = ins.op
+            if op in _FREE_OPS:
+                continue
+            if op == "while":
+                cond = re.search(r"condition=%?([\w.\-]+)", ins.attrs)
+                body = re.search(r"body=%?([\w.\-]+)", ins.attrs)
+                trips = self._trip_count(cond.group(1)) if cond else 1
+                if body:
+                    total += self.cost_of(body.group(1)).scaled(trips)
+                continue
+            if op == "conditional":
+                branches = re.findall(r"(?:branch_computations=\{([^}]*)\}|"
+                                      r"(?:true|false)_computation=%?([\w.\-]+))",
+                                      ins.attrs)
+                names = []
+                for grp, single in branches:
+                    if grp:
+                        names += _OPERAND.findall(grp)
+                    if single:
+                        names.append(single)
+                if names:
+                    worst = max((self.cost_of(n) for n in names),
+                                key=lambda c: c.flops + c.bytes)
+                    total += worst
+                continue
+            if op in ("call", "async-start"):
+                c = re.search(r"(?:to_apply|calls)=%?([\w.\-]+)", ins.attrs)
+                if c:
+                    total += self.cost_of(c.group(1))
+                continue
+            if op == "fusion":
+                c = re.search(r"calls=%?([\w.\-]+)", ins.attrs)
+                if c:
+                    total.flops += self._flops_only(c.group(1))
+                total.bytes += self._fusion_bytes(comp, ins)
+                continue
+            if op.startswith(_COLLECTIVES) or any(
+                    op == k or op == k + "-start" for k in _COLLECTIVES):
+                kind = next(k for k in _COLLECTIVES if op.startswith(k))
+                if op.endswith("-done"):
+                    continue
+                b = _shape_bytes(ins.shape)
+                total.coll[kind] += b
+                total.coll_groups[_parse_replica_groups(ins.attrs)] += b
+                total.bytes += b + self._operand_bytes(comp, ins.operands)
+                continue
+            if op.endswith("-done"):
+                continue
+            # generic top-level op (dot, copy, reduce, sort, gather, ...)
+            if op in ("dot", "convolution"):
+                total.flops += self._dot_flops(comp, ins)
+            total.bytes += self._generic_bytes(comp, ins)
+        self._memo[comp] = total
+        return total
+
+    def _flops_only(self, comp: str, _seen=None) -> float:
+        _seen = _seen or set()
+        if comp in _seen:
+            return 0.0
+        _seen.add(comp)
+        f = 0.0
+        for ins in self.comps.get(comp, []):
+            if ins.op in ("dot", "convolution"):
+                f += self._dot_flops(comp, ins)
+            else:
+                c = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", ins.attrs)
+                if c and ins.op in ("fusion", "call"):
+                    f += self._flops_only(c.group(1), _seen)
+        return f
+
+    def total(self) -> Cost:
+        assert self.entry, "no ENTRY computation found"
+        return self.cost_of(self.entry)
+
+
+def analyze_hlo(hlo_text: str) -> Cost:
+    return HloCostModel(hlo_text).total()
+
+
+def breakdown_hlo(hlo_text: str, top: int = 20) -> list[tuple[str, Cost]]:
+    """Per-op_name cost rows (scaled by loop trips), sorted by flops+bytes.
+
+    Mirrors cost_of()'s accounting exactly but tags every contribution with
+    its HLO metadata op_name -- the profiling view used by §Perf iterations.
+    """
+    m = HloCostModel(hlo_text, collect_breakdown=True)
+    rows: dict[str, Cost] = defaultdict(Cost)
+
+    def walk(comp: str, scale: float):
+        for ins in m.comps.get(comp, []):
+            op = ins.op
+            if op in _FREE_OPS:
+                continue
+            tag = m._tag(ins)
+            if op == "while":
+                cond = re.search(r"condition=%?([\w.\-]+)", ins.attrs)
+                body = re.search(r"body=%?([\w.\-]+)", ins.attrs)
+                trips = m._trip_count(cond.group(1)) if cond else 1
+                if body:
+                    walk(body.group(1), scale * trips)
+                continue
+            if op == "conditional":
+                continue
+            if op in ("call", "async-start"):
+                c = re.search(r"(?:to_apply|calls)=%?([\w.\-]+)", ins.attrs)
+                if c:
+                    walk(c.group(1), scale)
+                continue
+            if op == "fusion":
+                c = re.search(r"calls=%?([\w.\-]+)", ins.attrs)
+                f = m._flops_only(c.group(1)) if c else 0.0
+                b = m._fusion_bytes(comp, ins)
+                rows[tag] += Cost(f * scale, b * scale)
+                continue
+            if op.startswith(_COLLECTIVES):
+                if op.endswith("-done"):
+                    continue
+                kind = next(k for k in _COLLECTIVES if op.startswith(k))
+                b = _shape_bytes(ins.shape)
+                rows[tag] += Cost(0, (b + m._operand_bytes(comp, ins.operands))
+                                  * scale,
+                                  defaultdict(float, {kind: b * scale}))
+                continue
+            if op.endswith("-done"):
+                continue
+            f = m._dot_flops(comp, ins) if op in ("dot", "convolution") else 0.0
+            rows[tag] += Cost(f * scale, m._generic_bytes(comp, ins) * scale)
+
+    walk(m.entry, 1.0)
+    return sorted(rows.items(),
+                  key=lambda kv: -(kv[1].flops / 197e12 + kv[1].bytes / 819e9)
+                  )[:top]

@@ -1,0 +1,148 @@
+"""Roofline terms from a compiled (dry-run) executable.
+
+    compute    = HLO_FLOPs / peak_FLOPs          (per chip)
+    memory     = HLO_bytes / HBM_bw              (per chip)
+    collective = collective_bytes / link_bw      (per chip)
+
+Sources: ``compiled.cost_analysis()`` provides per-device HLO FLOPs and
+bytes (the SPMD module is the per-device program on this backend -- verified
+in tests/test_roofline.py).  collective_bytes is parsed from the compiled
+HLO text: we sum the RESULT-buffer bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute instruction (a consistent,
+documented convention; ring-algorithm constants ~2(n-1)/n are folded into
+the interpretation, not the number).
+
+MODEL_FLOPS = 6*N*D for training (3x forward 2ND: fwd+bwd), 2*N*D for
+inference, with N = active params for MoE.  The ratio MODEL_FLOPS /
+(HLO_FLOPs * chips) is the "useful compute" fraction -- remat recompute and
+dispatch overhead push it below 1 for training (remat ~ 4ND/6ND floor).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# TPU v5e per-chip constants (assignment-specified)
+@dataclasses.dataclass(frozen=True)
+class _HW:
+    peak_flops: float = 197e12       # bf16 FLOP/s
+    hbm_bw: float = 819e9            # B/s
+    ici_bw: float = 50e9             # B/s per link
+
+
+HW = _HW()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(pred|[sufc]\d+|bf16)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, int]:
+    """Sum result-buffer bytes per collective kind over the module."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        lhs, _, rhs = stripped.partition("=")
+        m = re.match(r"\s*(?:\([^)]*\)|\S+)\s+(" + "|".join(_COLLECTIVES)
+                     + r")(?:-start|-done)?\(", rhs.strip())
+        if not m:
+            continue
+        kind = m.group(1)
+        if "-done(" in rhs:      # async pair: count only the -start
+            continue
+        head = rhs.strip().split(kind)[0]
+        for dt, dims in _SHAPE_RE.findall(head):
+            out[kind] += _shape_bytes(dt, dims)
+    return out
+
+
+def model_flops(cfg, shape_kind: str, n_tokens: int) -> float:
+    """6ND (train) / 2ND (inference) with N = active params."""
+    n = cfg.active_param_count()
+    per_tok = 6 * n if shape_kind == "train" else 2 * n
+    return float(per_tok) * n_tokens
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    mode: str
+    n_chips: int
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    cross_pod_bytes_per_chip: float
+    collective_breakdown: dict
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops_total: float
+    useful_ratio: float
+    memory_args_gb: float
+    memory_temp_gb: float
+    memory_out_gb: float
+
+    def asdict(self):
+        return dataclasses.asdict(self)
+
+    def summary(self) -> str:
+        return (f"{self.arch:18s} {self.shape:12s} {self.mesh:9s} "
+                f"{self.mode:12s} "
+                f"Tc={self.t_compute * 1e3:9.3f}ms "
+                f"Tm={self.t_memory * 1e3:9.3f}ms "
+                f"Tcoll={self.t_collective * 1e3:9.3f}ms "
+                f"xpod={self.cross_pod_bytes_per_chip / 2**30:7.2f}GB "
+                f"dom={self.bottleneck:10s} useful={self.useful_ratio:6.3f} "
+                f"mem={self.memory_args_gb + self.memory_temp_gb:6.1f}GB")
+
+
+def analyze_compiled(compiled, cfg, *, arch: str, shape: str, shape_kind: str,
+                     n_tokens: int, mesh_desc: str, mode: str,
+                     n_chips: int) -> RooflineReport:
+    # trip-count-aware walker (XLA's cost_analysis counts while bodies once;
+    # see analysis/hlo_cost.py and tests/test_roofline.py)
+    from .hlo_cost import analyze_hlo
+    cost = analyze_hlo(compiled.as_text())
+    flops = float(cost.flops)
+    byts = float(cost.bytes)
+    coll = dict(cost.coll)
+    coll_total = float(sum(coll.values()))
+    t_c = flops / HW.peak_flops
+    t_m = byts / HW.hbm_bw
+    t_x = coll_total / HW.ici_bw
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape_kind, n_tokens)
+    mem = compiled.memory_analysis()
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_desc, mode=mode, n_chips=n_chips,
+        hlo_flops_per_chip=flops, hlo_bytes_per_chip=byts,
+        collective_bytes_per_chip=coll_total,
+        cross_pod_bytes_per_chip=float(cost.cross_pod_bytes),
+        collective_breakdown=coll,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x, bottleneck=dom,
+        model_flops_total=mf,
+        useful_ratio=mf / max(flops * n_chips, 1.0),
+        memory_args_gb=mem.argument_size_in_bytes / 2**30,
+        memory_temp_gb=mem.temp_size_in_bytes / 2**30,
+        memory_out_gb=mem.output_size_in_bytes / 2**30,
+    )

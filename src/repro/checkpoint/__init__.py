@@ -1,0 +1,4 @@
+"""Checkpointing: msgpack + raw-numpy serialization of param/opt pytrees."""
+from .io import latest_step, load_checkpoint, restore, save_checkpoint
+
+__all__ = ["latest_step", "load_checkpoint", "restore", "save_checkpoint"]

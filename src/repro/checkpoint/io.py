@@ -1,0 +1,77 @@
+"""Minimal but real checkpointing: pytrees -> msgpack (structure) + .npy blobs.
+
+Layout:  <dir>/step_<N>/manifest.msgpack  (treedef paths, dtypes, shapes)
+         <dir>/step_<N>/arr_<i>.npy       (one blob per leaf)
+
+Works for params, optimizer states and error-feedback states (anything
+jax.tree_util can flatten with key paths).  bfloat16 leaves are stored as
+uint16 views with a dtype tag (numpy has no bf16).
+"""
+from __future__ import annotations
+
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _leaf_to_numpy(x) -> tuple[np.ndarray, str]:
+    x = jax.device_get(x)
+    if x.dtype == jnp.bfloat16:
+        return np.asarray(x).view(np.uint16), "bfloat16"
+    return np.asarray(x), str(x.dtype)
+
+
+def _numpy_to_leaf(arr: np.ndarray, tag: str):
+    if tag == "bfloat16":
+        return jnp.asarray(arr.view(jnp.bfloat16))
+    return jnp.asarray(arr.astype(tag))
+
+
+def save_checkpoint(directory: str, step: int, tree) -> str:
+    path = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    manifest = {"n_leaves": len(leaves), "treedef": str(treedef),
+                "step": step, "dtypes": [], "shapes": []}
+    for i, leaf in enumerate(leaves):
+        arr, tag = _leaf_to_numpy(leaf)
+        manifest["dtypes"].append(tag)
+        manifest["shapes"].append(list(arr.shape))
+        np.save(os.path.join(path, f"arr_{i:05d}.npy"), arr)
+    with open(os.path.join(path, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    return path
+
+
+def load_checkpoint(directory: str, step: int, like):
+    """Restore into the structure of ``like`` (a template pytree)."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    assert manifest["n_leaves"] == len(leaves_like), \
+        f"checkpoint has {manifest['n_leaves']} leaves, template has {len(leaves_like)}"
+    leaves = []
+    for i, tag in enumerate(manifest["dtypes"]):
+        arr = np.load(os.path.join(path, f"arr_{i:05d}.npy"))
+        leaves.append(_numpy_to_leaf(arr, tag))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := re.match(r"step_(\d+)$", d))]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, like):
+    step = latest_step(directory)
+    if step is None:
+        return None, None
+    return load_checkpoint(directory, step, like), step

@@ -1,0 +1,146 @@
+"""ArchConfig: one dataclass describing every supported architecture.
+
+Every assigned architecture gets a module ``repro/configs/<id>.py`` exporting
+``CONFIG`` (the exact full-size assignment) and ``smoke()`` (a reduced
+same-family variant: <=2 layers, d_model <= 512, <= 4 experts) used by the
+CPU smoke tests.  ``repro.configs.registry`` maps ``--arch`` ids to modules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    arch_type: str                # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int                  # 0 => attention-free
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 => d_model // n_heads
+    mlp: str = "swiglu"           # swiglu | gelu (non-gated) | geglu
+    norm: str = "rmsnorm"         # rmsnorm | layernorm
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    use_rope: bool = True
+    tie_embeddings: bool = False
+    max_position: int = 131_072   # learned-pos archs use this as table size
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_tok: int = 0
+    d_expert: int = 0             # per-expert hidden dim (defaults to d_ff)
+    moe_capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # --- SSM (mamba2) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 128
+    # --- hybrid (zamba2): one SHARED attention block applied every k blocks
+    attn_every: int = 0
+    # --- enc-dec (whisper) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 1500       # whisper: 30 s of 20 ms frames
+    # --- modality frontend stub (vlm/audio): prefix embeddings fed directly
+    n_prefix_tokens: int = 0
+    # --- long-context decode ---
+    window: int = 4096            # sliding-window size used by long_500k
+    # --- systems knobs ---
+    fsdp: bool = False            # additionally shard params over "data"
+    optimizer: str = "adamw"      # adamw | sgdm  (sgdm for the 314B MoE)
+    remat: bool = True
+    attn_q_chunk: int = 512       # query-chunked attention block size
+    loss_chunk: int = 1024        # sequence-chunked cross-entropy block
+    # §Perf levers (EXPERIMENTS.md): both default ON after hillclimbing;
+    # set False to reproduce the paper-faithful/naive baseline rows.
+    attn_remat_chunks: bool = True   # recompute attn probs in backward
+    attn_seq_shard: bool = True      # context-parallel K/V layout
+    dtype: Any = jnp.bfloat16
+    source: str = ""              # citation
+
+    # ------------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def d_exp(self) -> int:
+        return self.d_expert or self.d_ff
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab padded to a multiple of 256 so it shards over 16-way model."""
+        return math.ceil(self.vocab_size / 256) * 256
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.arch_type == "ssm"
+
+    @property
+    def supports_long_decode(self) -> bool:
+        """long_500k: native for ssm/hybrid, sliding-window for the rest."""
+        return True  # dense archs use the sliding-window variant (DESIGN §4)
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND roofline terms)."""
+        d, v = self.d_model, self.vocab_padded
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        n = emb
+        mlp_gate = 3 if self.mlp in ("swiglu", "geglu") else 2
+
+        def attn_params():
+            return d * self.n_heads * self.hd + 2 * d * self.n_kv_heads * self.hd \
+                + self.n_heads * self.hd * d
+
+        def mlp_params(dff):
+            return mlp_gate * d * dff
+
+        def moe_params():
+            return d * self.n_experts + self.n_experts * mlp_params(self.d_exp)
+
+        def ssm_params():
+            di, ns = self.d_inner, self.ssm_state
+            in_proj = d * (2 * di + 2 * ns + self.ssm_heads)
+            return in_proj + self.ssm_conv * (di + 2 * ns) + di * d \
+                + 2 * self.ssm_heads + di
+
+        if self.arch_type == "ssm":
+            n += self.n_layers * (ssm_params() + 2 * d)
+        elif self.arch_type == "hybrid":
+            n += self.n_layers * (ssm_params() + 2 * d)
+            n += attn_params() + mlp_params(self.d_ff) + 2 * d  # shared block
+        elif self.arch_type == "moe":
+            n += self.n_layers * (attn_params() + moe_params() + 2 * d)
+        elif self.arch_type == "audio":
+            n += (self.n_layers + self.encoder_layers) * (
+                attn_params() + mlp_params(self.d_ff) + 2 * d)
+            n += self.n_layers * (attn_params() + d)  # cross-attention
+        else:  # dense / vlm
+            n += self.n_layers * (attn_params() + mlp_params(self.d_ff) + 2 * d)
+        return int(n)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k experts only)."""
+        if self.arch_type != "moe":
+            return self.param_count()
+        mlp_gate = 3 if self.mlp in ("swiglu", "geglu") else 2
+        full_moe = self.n_experts * mlp_gate * self.d_model * self.d_exp
+        active_moe = self.experts_per_tok * mlp_gate * self.d_model * self.d_exp
+        return int(self.param_count() - self.n_layers * (full_moe - active_moe))

@@ -1,0 +1,20 @@
+"""GLM-4-9B [hf:THUDM/glm-4-9b] -- dense, RoPE, GQA kv=2, QKV bias."""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="glm4-9b", arch_type="dense",
+    n_layers=40, d_model=4096, n_heads=32, n_kv_heads=2,
+    d_ff=13696, vocab_size=151_552,
+    qkv_bias=True, mlp="swiglu", norm="rmsnorm",
+    fsdp=True,
+    source="hf:THUDM/glm-4-9b",
+)
+
+
+def smoke() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, name="glm4-9b-smoke", n_layers=2, d_model=256, n_heads=4,
+        n_kv_heads=2, d_ff=512, vocab_size=512, fsdp=False, remat=False,
+        attn_q_chunk=64)

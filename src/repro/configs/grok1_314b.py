@@ -1,0 +1,28 @@
+"""Grok-1-314B [hf:xai-org/grok-1] -- MoE 8 experts top-2, GQA kv=8.
+
+Systems notes: at 314B params the optimizer is SGD-momentum (bf16 moment)
+instead of AdamW so that state fits 16 GB/chip HBM on the 256-chip pod
+(params 2.45 GB + grads 2.45 + moment 2.45 per chip when FSDP-sharded);
+with AdamW (f32 m,v) the dry-run memory analysis exceeds HBM.  Recorded in
+EXPERIMENTS.md §Dry-run."""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="grok-1-314b", arch_type="moe",
+    n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=32_768, vocab_size=131_072,
+    n_experts=8, experts_per_tok=2, d_expert=32_768,
+    mlp="geglu", norm="rmsnorm",   # gated experts: 3 matmuls -> ~314B total
+    fsdp=True, optimizer="sgdm",
+    source="hf:xai-org/grok-1",
+)
+
+
+def smoke() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, name="grok1-smoke", n_layers=2, d_model=128, n_heads=4,
+        n_kv_heads=2, d_ff=256, d_expert=256, vocab_size=512,
+        n_experts=4, experts_per_tok=2, fsdp=False, remat=False,
+        attn_q_chunk=64)

@@ -1,0 +1,20 @@
+"""OLMoE-1B-7B [arXiv:2409.02060] -- 64 experts, top-8, d_expert=1024."""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="olmoe-1b-7b", arch_type="moe",
+    n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1024, vocab_size=50_304,
+    n_experts=64, experts_per_tok=8, d_expert=1024,
+    mlp="swiglu", norm="rmsnorm",
+    source="arXiv:2409.02060",
+)
+
+
+def smoke() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, name="olmoe-smoke", n_layers=2, d_model=128, n_heads=4,
+        n_kv_heads=4, d_ff=128, d_expert=128, vocab_size=512,
+        n_experts=4, experts_per_tok=2, remat=False, attn_q_chunk=64)

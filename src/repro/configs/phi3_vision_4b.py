@@ -1,0 +1,24 @@
+"""Phi-3-vision-4.2B [hf:microsoft/Phi-3-vision-128k-instruct] -- phi3-mini
+backbone + CLIP frontend.  Vision encoder is a STUB: input_specs() feeds 576
+precomputed patch embeddings (B,576,1024) through a learned projector
+(the assignment's modality carve-out, DESIGN.md §4)."""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi-3-vision-4.2b", arch_type="vlm",
+    n_layers=32, d_model=3072, n_heads=32, n_kv_heads=32,
+    d_ff=8192, vocab_size=32_064,
+    n_prefix_tokens=576,                       # CLIP ViT-L/14 @ 336px
+    mlp="swiglu", norm="rmsnorm",
+    fsdp=True,
+    source="hf:microsoft/Phi-3-vision-128k-instruct",
+)
+
+
+def smoke() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, name="phi3v-smoke", n_layers=2, d_model=256, n_heads=4,
+        n_kv_heads=4, d_ff=512, vocab_size=512, n_prefix_tokens=16,
+        fsdp=False, remat=False, attn_q_chunk=64)

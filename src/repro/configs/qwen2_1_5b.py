@@ -1,0 +1,19 @@
+"""Qwen2-1.5B [arXiv:2407.10671] -- dense GQA kv=2, QKV bias, tied embed."""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-1.5b", arch_type="dense",
+    n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2,
+    d_ff=8960, vocab_size=151_936,
+    qkv_bias=True, tie_embeddings=True,
+    mlp="swiglu", norm="rmsnorm",
+    source="arXiv:2407.10671",
+)
+
+
+def smoke() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, name="qwen2-smoke", n_layers=2, d_model=256, n_heads=4,
+        n_kv_heads=2, d_ff=512, vocab_size=512, remat=False, attn_q_chunk=64)

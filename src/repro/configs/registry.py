@@ -1,0 +1,39 @@
+"""Architecture registry: ``--arch <id>`` -> ArchConfig."""
+from __future__ import annotations
+
+import importlib
+
+from .base import ArchConfig
+
+_MODULES = {
+    "glm4-9b": "glm4_9b",
+    "whisper-small": "whisper_small",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "yi-34b": "yi_34b",
+    "mamba2-370m": "mamba2_370m",
+    "phi-3-vision-4.2b": "phi3_vision_4b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "grok-1-314b": "grok1_314b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "starcoder2-7b": "starcoder2_7b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def _module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; choose from {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    return _module(arch_id).CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ArchConfig:
+    return _module(arch_id).smoke()
+
+
+def list_archs() -> list[str]:
+    return list(ARCH_IDS)

@@ -1,0 +1,21 @@
+"""StarCoder2-7B [arXiv:2402.19173] -- dense GQA kv=4, RoPE, layernorm,
+non-gated GELU MLP, attention bias."""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-7b", arch_type="dense",
+    n_layers=32, d_model=4608, n_heads=36, n_kv_heads=4,
+    d_ff=18_432, vocab_size=49_152,
+    qkv_bias=True, mlp="gelu", norm="layernorm",
+    fsdp=True,
+    source="arXiv:2402.19173",
+)
+
+
+def smoke() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, name="starcoder2-smoke", n_layers=2, d_model=256, n_heads=4,
+        n_kv_heads=2, d_ff=512, vocab_size=512, fsdp=False, remat=False,
+        attn_q_chunk=64)

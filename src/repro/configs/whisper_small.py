@@ -1,0 +1,24 @@
+"""Whisper-small [arXiv:2212.04356] -- enc-dec audio; conv frontend is a
+STUB: input_specs() feeds 1500 precomputed 20ms-frame embeddings (B,1500,768)
+to the encoder (the assignment's modality carve-out, DESIGN.md §4)."""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-small", arch_type="audio",
+    n_layers=12, encoder_layers=12, encoder_seq=1500,
+    d_model=768, n_heads=12, n_kv_heads=12,
+    d_ff=3072, vocab_size=51_865,
+    mlp="gelu", norm="layernorm", use_rope=False,
+    max_position=32_768,     # mechanical decode-32k support; whisper's own
+                             # decoder ceiling is 448 tokens (DESIGN.md §4)
+    source="arXiv:2212.04356",
+)
+
+
+def smoke() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, name="whisper-small-smoke", n_layers=2, encoder_layers=2,
+        encoder_seq=64, d_model=128, n_heads=4, n_kv_heads=4, d_ff=256,
+        vocab_size=512, max_position=256, remat=False, attn_q_chunk=64)

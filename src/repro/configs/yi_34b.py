@@ -1,0 +1,20 @@
+"""Yi-34B [arXiv:2403.04652] -- llama-architecture dense, GQA kv=8."""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="yi-34b", arch_type="dense",
+    n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=20_480, vocab_size=64_000,
+    mlp="swiglu", norm="rmsnorm",
+    fsdp=True,
+    source="arXiv:2403.04652",
+)
+
+
+def smoke() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, name="yi-34b-smoke", n_layers=2, d_model=256, n_heads=8,
+        n_kv_heads=2, d_ff=512, vocab_size=512, fsdp=False, remat=False,
+        attn_q_chunk=64)

@@ -1,0 +1,23 @@
+"""Zamba2-1.2B [arXiv:2411.15242] -- hybrid: Mamba2 backbone with ONE shared
+attention(+MLP) block applied every 6 mamba blocks (weight sharing is the
+zamba trick; each application site keeps its own KV cache at decode)."""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-1.2b", arch_type="hybrid",
+    n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32,
+    d_ff=8192, vocab_size=32_000,
+    ssm_state=64, ssm_head_dim=64, ssm_expand=2, ssm_conv=4, ssm_chunk=128,
+    attn_every=6,
+    mlp="swiglu", norm="rmsnorm",
+    source="arXiv:2411.15242",
+)
+
+
+def smoke() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, name="zamba2-smoke", n_layers=4, d_model=128, n_heads=4,
+        n_kv_heads=4, d_ff=256, ssm_state=16, ssm_head_dim=32, ssm_chunk=16,
+        attn_every=2, vocab_size=512, remat=False, attn_q_chunk=64)

@@ -1,0 +1,21 @@
+"""LGC core: layered gradient compression, FL loop, channels, control."""
+from .compressor import (LGCCompressor, flatten_tree, lgc_compress, lgc_layers,
+                         top_alpha_beta, top_k, tree_size, unflatten_like,
+                         wire_bytes)
+from .error_feedback import EFState, ef_compress, init_ef
+from .channels import (DEFAULT_CHANNELS, ChannelSpec, DeviceProfile,
+                       comm_cost, comp_cost, sample_channels)
+from .fl import (FLConfig, FLTask, FixedController, History, LGCSimulator,
+                 RoundDecision, run_baseline)
+from .convergence import ProblemConstants, corollary1_rate, theorem1_bound
+
+__all__ = [
+    "LGCCompressor", "flatten_tree", "lgc_compress", "lgc_layers",
+    "top_alpha_beta", "top_k", "tree_size", "unflatten_like", "wire_bytes",
+    "EFState", "ef_compress", "init_ef",
+    "DEFAULT_CHANNELS", "ChannelSpec", "DeviceProfile", "comm_cost",
+    "comp_cost", "sample_channels",
+    "FLConfig", "FLTask", "FixedController", "History", "LGCSimulator",
+    "RoundDecision", "run_baseline",
+    "ProblemConstants", "corollary1_rate", "theorem1_bound",
+]

@@ -1,0 +1,103 @@
+"""Multi-channel communication model (paper §4.1, Table 1).
+
+Each edge device connects to the server over N heterogeneous channels
+(3G / 4G / 5G by default).  Per channel we model:
+
+* energy per MB  -- Gaussian, Table 1:  3G mean 1296 J/MB, 4G 2.2x, 5G
+  2.5*2.2x, sigma 0.00033 (paper adopts (Wang et al. 2019)'s model);
+* bandwidth MB/s -- lognormal-jittered around a nominal rate (the paper calls
+  the network "highly dynamic"; it does not publish rates, we use public
+  nominal figures: 3G ~0.6 MB/s, 4G ~3 MB/s, 5G ~25 MB/s);
+* money cost per MB -- flat tariff per technology (5G most expensive);
+* availability  -- Bernoulli per round (a dropped channel loses its layer,
+  the layered code degrades gracefully).
+
+All sampling is numpy-free, driven by jax.random keys, so simulations are
+fully reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_3G_MEAN_J_PER_MB = 1296.0  # Table 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelSpec:
+    name: str
+    energy_mean_j_per_mb: float           # Table 1 mean
+    energy_std: float                     # Table 1 standard deviation
+    bandwidth_mb_s: float                 # nominal throughput
+    money_per_mb: float                   # tariff
+    availability: float = 1.0             # P(channel up in a round)
+
+
+DEFAULT_CHANNELS: tuple[ChannelSpec, ...] = (
+    ChannelSpec("3G", _3G_MEAN_J_PER_MB, 0.00033, 0.6, 0.01, 0.98),
+    ChannelSpec("4G", 2.2 * _3G_MEAN_J_PER_MB, 0.00033, 3.0, 0.02, 0.95),
+    ChannelSpec("5G", 2.5 * 2.2 * _3G_MEAN_J_PER_MB, 0.00033, 25.0, 0.05, 0.90),
+)
+
+
+@dataclasses.dataclass
+class ChannelSample:
+    """Realised channel conditions for one device in one round."""
+    energy_j_per_mb: Array      # (N,)
+    bandwidth_mb_s: Array       # (N,)
+    money_per_mb: Array         # (N,)
+    up: Array                   # (N,) bool
+
+
+def sample_channels(key: Array, specs: Sequence[ChannelSpec] = DEFAULT_CHANNELS,
+                    ) -> ChannelSample:
+    n = len(specs)
+    k_e, k_b, k_u = jax.random.split(key, 3)
+    means = jnp.array([s.energy_mean_j_per_mb for s in specs])
+    stds = jnp.array([s.energy_std for s in specs])
+    energy = means + stds * jax.random.normal(k_e, (n,))
+    bw_nom = jnp.array([s.bandwidth_mb_s for s in specs])
+    # lognormal jitter, sigma=0.3 -- "highly dynamic edge network"
+    bw = bw_nom * jnp.exp(0.3 * jax.random.normal(k_b, (n,)))
+    money = jnp.array([s.money_per_mb for s in specs])
+    avail = jnp.array([s.availability for s in specs])
+    up = jax.random.uniform(k_u, (n,)) < avail
+    return ChannelSample(energy, bw, money, up)
+
+
+def comm_cost(sample: ChannelSample, bytes_per_channel: Sequence[int]
+              ) -> dict[str, Array]:
+    """Energy (J), money, and transfer time (s) for one upload.
+
+    Layers travel in parallel on their channels, so wall time is the max
+    across channels; energy/money are sums.  Dropped channels transmit
+    nothing (their layer is lost for this round).
+    """
+    mb = jnp.array([b / 1e6 for b in bytes_per_channel])
+    mb = jnp.where(sample.up, mb, 0.0)
+    energy = jnp.sum(mb * sample.energy_j_per_mb)
+    money = jnp.sum(mb * sample.money_per_mb)
+    time_s = jnp.max(jnp.where(sample.up, mb / sample.bandwidth_mb_s, 0.0))
+    return {"energy_j": energy, "money": money, "time_s": time_s}
+
+
+# Per-local-step compute energy model (J per SGD step per MFLOP); the paper's
+# E_comp is device-specific -- we expose it as a constant per device profile.
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    name: str = "generic-phone"
+    comp_j_per_step: float = 0.75   # J per local SGD step (model-size scaled)
+    comp_time_per_step_s: float = 0.05
+
+
+def comp_cost(profile: DeviceProfile, h_steps: int) -> dict[str, float]:
+    return {
+        "energy_j": profile.comp_j_per_step * h_steps,
+        "money": 0.0,
+        "time_s": profile.comp_time_per_step_s * h_steps,
+    }

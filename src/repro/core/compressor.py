@@ -1,0 +1,223 @@
+"""LGC compressors (paper §2.1).
+
+Implements, in pure JAX:
+
+* ``top_k(x, k)``               -- classic Top_k sparsifier (Eq. before (1)).
+* ``top_alpha_beta(x, a, b)``   -- Top_{alpha,beta}: keep coordinates whose
+                                   |x_i| rank lies in (alpha, beta]  (Eq. (1)).
+* ``lgc_layers(x, ks)``         -- the C disjoint layers
+                                   {Top_{K_{c-1}, K_c}(x)}_{c=1..C}  (Eq. (2)).
+* ``lgc_compress(x, ks, mask)`` -- LGC_k(x) = sum of the *received* layers.
+
+Rank semantics follow the paper: thr_alpha is the alpha-th largest absolute
+value, and Top_{alpha,beta} keeps thr_alpha >= |x_i| > thr_beta.  We resolve
+ties by strict rank (jnp.argsort of -|x|), which makes layers exactly disjoint
+and sum(layers) == top_{K_C}(x) -- the property the server decode relies on.
+
+Histogram-threshold selection (the TPU-native approximation used by the
+Pallas kernels) lives in ``repro.kernels``; this module is the exact oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> flat vector helpers
+# ---------------------------------------------------------------------------
+
+def tree_size(tree) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def flatten_tree(tree) -> Array:
+    """Concatenate all leaves into one flat f32 vector (stable leaf order)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves])
+
+
+def unflatten_like(flat: Array, tree):
+    """Inverse of :func:`flatten_tree` against a reference pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out, off = [], 0
+    for l in leaves:
+        n = int(l.size)
+        out.append(jnp.reshape(flat[off:off + n], l.shape).astype(l.dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# rank-exact compressors (paper semantics)
+# ---------------------------------------------------------------------------
+
+def _rank_of(x: Array) -> Array:
+    """rank[i] = 0-based rank of |x_i| among all coordinates (0 = largest).
+
+    Strict total order (argsort tie-break) so that rank-range selections are
+    exactly disjoint.
+    """
+    order = jnp.argsort(-jnp.abs(x))          # indices sorted by |x| desc
+    rank = jnp.zeros_like(order).at[order].set(jnp.arange(x.shape[0]))
+    return rank
+
+
+def top_k(x: Array, k: int) -> Array:
+    """Keep the k largest-|.| coordinates of x, zero the rest."""
+    if k <= 0:
+        return jnp.zeros_like(x)
+    if k >= x.shape[0]:
+        return x
+    rank = _rank_of(x)
+    return jnp.where(rank < k, x, 0.0)
+
+
+def top_alpha_beta(x: Array, alpha: int, beta: int) -> Array:
+    """Top_{alpha,beta}: keep coordinates ranked in (alpha, beta] by |.|.
+
+    Paper Eq. (1) keeps thr_alpha >= |x_i| > thr_beta where thr_j is the j-th
+    largest absolute value; in strict-rank terms that is
+    ``alpha - 1 <= rank < beta`` with 1-based (alpha, beta].  We expose the
+    0-based half-open rank interval [alpha, beta) which matches
+    Top_{alpha+1..beta} of the paper and composes cleanly into layers.
+    """
+    rank = _rank_of(x)
+    return jnp.where((rank >= alpha) & (rank < beta), x, 0.0)
+
+
+def lgc_layers(x: Array, ks: Sequence[int]) -> list[Array]:
+    """Split x into C disjoint layers; layer c keeps ranks [K_{c-1}, K_c).
+
+    ks are the per-channel coordinate budgets k_c (paper's traffic
+    allocation vector k).  sum(layers) == top_k(x, sum(ks)).
+    """
+    rank = _rank_of(x)
+    layers, lo = [], 0
+    for k in ks:
+        hi = lo + int(k)
+        layers.append(jnp.where((rank >= lo) & (rank < hi), x, 0.0))
+        lo = hi
+    return layers
+
+
+def lgc_compress(x: Array, ks: Sequence[int],
+                 received: Sequence[bool] | None = None) -> Array:
+    """LGC_k(x) (paper Eq. (2)): sum of layers that actually arrived.
+
+    ``received[c]`` models channel c delivering its layer; default all True
+    (ideal channels), in which case LGC_k(x) == Top_{sum(ks)}(x).
+    """
+    layers = lgc_layers(x, ks)
+    if received is None:
+        received = [True] * len(layers)
+    out = jnp.zeros_like(x)
+    for layer, ok in zip(layers, received):
+        out = out + (layer if ok else jnp.zeros_like(layer))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# sparse wire format -- what actually crosses a channel
+# ---------------------------------------------------------------------------
+
+def layer_to_sparse(layer_dense: Array, k: int, x: Array,
+                    lo: int) -> tuple[Array, Array]:
+    """Extract fixed-size (values, indices) for a layer from the full vector.
+
+    Used for wire-byte accounting and for the sparse_gather collective mode:
+    the k coordinates ranked [lo, lo+k) of |x|.
+    """
+    rank = _rank_of(x)
+    # position p gets the index whose rank == lo + p
+    order = jnp.argsort(rank)            # order[r] = index with rank r
+    idx = jax.lax.dynamic_slice_in_dim(order, lo, k)
+    vals = x[idx]
+    del layer_dense
+    return vals, idx
+
+
+def sparse_to_dense(vals: Array, idx: Array, d: int) -> Array:
+    """Scatter (values, indices) back to a dense D-vector (server decode)."""
+    return jnp.zeros((d,), vals.dtype).at[idx].set(vals)
+
+
+def wire_bytes(ks: Sequence[int], value_bytes: int = 4,
+               index_bytes: int = 4) -> list[int]:
+    """Bytes on the wire per channel for the sparse format."""
+    return [int(k) * (value_bytes + index_bytes) for k in ks]
+
+
+# ---------------------------------------------------------------------------
+# compressor objects (used by the FL loop and the distributed step)
+# ---------------------------------------------------------------------------
+
+class LGCCompressor:
+    """Stateless layered compressor bound to layer budgets ``ks``.
+
+    gamma (paper's contraction coefficient) for Top_K satisfies
+    E||u - C(u)||^2 <= (1 - K/D)||u||^2, i.e. gamma = K/D in the worst case.
+    """
+
+    def __init__(self, ks: Sequence[int]):
+        self.ks = [int(k) for k in ks]
+        self.k_total = sum(self.ks)
+
+    def gamma(self, d: int) -> float:
+        return min(1.0, self.k_total / max(d, 1))
+
+    def __call__(self, u: Array, received: Sequence[bool] | None = None) -> Array:
+        return lgc_compress(u, self.ks, received)
+
+    def layers(self, u: Array) -> list[Array]:
+        return lgc_layers(u, self.ks)
+
+    def sparse_layers(self, u: Array) -> list[tuple[Array, Array]]:
+        out, lo = [], 0
+        for k in self.ks:
+            out.append(layer_to_sparse(None, k, u, lo))
+            lo += k
+        return out
+
+    def wire_bytes(self) -> list[int]:
+        return wire_bytes(self.ks)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def topk_jit(x: Array, k: int) -> Array:
+    return top_k(x, k)
+
+
+# ---------------------------------------------------------------------------
+# QSGD quantization (Alistarh et al. 2017, cited by the paper §5.1) --
+# composes with LGC: the selected layer values are quantized to s levels
+# with unbiased stochastic rounding before transmission; the quantization
+# residual joins the error-feedback memory like any other compression error.
+# ---------------------------------------------------------------------------
+
+def qsgd_quantize(x: Array, key: Array, levels: int = 255
+                  ) -> tuple[Array, Array]:
+    """Unbiased stochastic quantization: returns (q int8/int16 codes, scale).
+
+    q_i in [-levels/2, levels/2], E[dequantize(q)] == x elementwise.
+    """
+    scale = jnp.max(jnp.abs(x)) + 1e-30
+    half = levels // 2
+    y = x / scale * half                       # in [-half, half]
+    lo = jnp.floor(y)
+    p = y - lo                                 # P(round up)
+    up = jax.random.uniform(key, x.shape) < p
+    q = (lo + up.astype(jnp.float32)).astype(jnp.int32)
+    q = jnp.clip(q, -half, half)
+    return q, scale
+
+
+def qsgd_dequantize(q: Array, scale: Array, levels: int = 255) -> Array:
+    half = levels // 2
+    return q.astype(jnp.float32) * (scale / half)

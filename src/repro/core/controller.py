@@ -1,0 +1,208 @@
+"""Learning-based control algorithm (paper §3): per-device DDPG.
+
+Each device runs its own agent deciding, at every synchronization, its
+  * H_m      -- number of local computation steps until the next sync
+  * D_{m,n}  -- gradient entries allocated to channel n (the LGC layer sizes)
+
+State  (Eq. 11-12): per-resource communication/computation consumption.
+Action (Eq. 13):    a = (H, D_1..D_N), continuous, squashed by tanh.
+Reward (Eq. 14-16): weighted ratio of utility U = (loss drop)/(spend).
+
+DDPG (Lillicrap et al. 2015): deterministic actor pi(s|theta_pi), critic
+Q(s,a|theta_Q), replay buffer, soft target networks, Gaussian exploration
+noise.  Pure JAX (MLPs + Adam from repro.optim), numpy ring replay buffer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fl import RoundDecision
+from repro.optim.optimizers import (OptimizerConfig, adamw_init, adamw_update,
+                                    apply_updates)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# tiny MLPs
+# ---------------------------------------------------------------------------
+
+def _mlp_init(key, sizes):
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        k1, key = jax.random.split(key)
+        params.append({"w": jax.random.normal(k1, (a, b)) * (2 / a) ** 0.5,
+                       "b": jnp.zeros((b,))})
+    return params
+
+
+def _mlp_apply(params, x, final_tanh=False):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return jnp.tanh(x) if final_tanh else x
+
+
+# ---------------------------------------------------------------------------
+# DDPG agent
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DDPGConfig:
+    state_dim: int = 4           # energy, money, time, mb  (per Eq. 11)
+    n_channels: int = 3
+    h_max: int = 8               # cap on local steps (paper's H bound)
+    k_total_max: int = 0         # max coords/round; set from model size
+    hidden: int = 64
+    gamma: float = 0.95          # discount (paper's gamma_m)
+    tau: float = 0.01            # soft target update
+    buffer_size: int = 4096
+    batch_size: int = 64
+    noise_sigma: float = 0.2
+    noise_decay: float = 0.999
+    lr: float = 1e-3
+    seed: int = 0
+
+
+class ReplayBuffer:
+    def __init__(self, capacity: int, state_dim: int, action_dim: int):
+        self.s = np.zeros((capacity, state_dim), np.float32)
+        self.a = np.zeros((capacity, action_dim), np.float32)
+        self.r = np.zeros((capacity,), np.float32)
+        self.s2 = np.zeros((capacity, state_dim), np.float32)
+        self.n, self.idx, self.capacity = 0, 0, capacity
+
+    def add(self, s, a, r, s2):
+        i = self.idx
+        self.s[i], self.a[i], self.r[i], self.s2[i] = s, a, r, s2
+        self.idx = (i + 1) % self.capacity
+        self.n = min(self.n + 1, self.capacity)
+
+    def sample(self, rng: np.random.Generator, batch: int):
+        idx = rng.integers(0, self.n, batch)
+        return self.s[idx], self.a[idx], self.r[idx], self.s2[idx]
+
+
+class DDPGController:
+    """Implements the fl.py controller interface (act / reward)."""
+
+    def __init__(self, cfg: DDPGConfig):
+        self.cfg = cfg
+        self.action_dim = 1 + cfg.n_channels
+        key = jax.random.PRNGKey(cfg.seed)
+        ka, kc = jax.random.split(key)
+        self.actor = _mlp_init(ka, [cfg.state_dim, cfg.hidden, cfg.hidden,
+                                    self.action_dim])
+        self.critic = _mlp_init(kc, [cfg.state_dim + self.action_dim,
+                                     cfg.hidden, cfg.hidden, 1])
+        self.actor_t = jax.tree_util.tree_map(jnp.copy, self.actor)
+        self.critic_t = jax.tree_util.tree_map(jnp.copy, self.critic)
+        ocfg = OptimizerConfig(lr=cfg.lr, warmup_steps=1, weight_decay=0.0)
+        self._ocfg = ocfg
+        self.opt_a = adamw_init(self.actor)
+        self.opt_c = adamw_init(self.critic)
+        self.buffer = ReplayBuffer(cfg.buffer_size, cfg.state_dim,
+                                   self.action_dim)
+        self._rng = np.random.default_rng(cfg.seed)
+        self.sigma = cfg.noise_sigma
+        self._last: tuple | None = None     # (state, raw_action)
+        self.critic_losses: list[float] = []
+        self.rewards: list[float] = []
+        self._train_step = jax.jit(self._make_train_step())
+
+    # -- controller interface -------------------------------------------
+    def act(self, state: np.ndarray) -> RoundDecision:
+        s = self._norm_state(state)
+        a = np.asarray(_mlp_apply(self.actor, jnp.asarray(s),
+                                  final_tanh=True))
+        a = a + self._rng.normal(0, self.sigma, a.shape)
+        a = np.clip(a, -1, 1)
+        self.sigma *= self.cfg.noise_decay
+        self._last = (s, a.astype(np.float32))
+        return self._to_decision(a)
+
+    def reward(self, loss_drop: float, new_state: np.ndarray):
+        """Called by the simulator after the round (Eq. 14-16 computed here
+        from loss drop and the *incremental* spend recorded in the state)."""
+        if self._last is None:
+            return
+        s, a = self._last
+        s2 = self._norm_state(new_state)
+        spend = float(np.sum(np.maximum(s2 - s, 1e-6)))
+        r = float(np.clip(loss_drop / spend, -10.0, 10.0))
+        self.rewards.append(r)
+        self.buffer.add(s, a, r, s2)
+        self._last = None
+        if self.buffer.n >= self.cfg.batch_size:
+            self._learn()
+
+    # -- internals --------------------------------------------------------
+    def _norm_state(self, state: np.ndarray) -> np.ndarray:
+        # log-scale resources so the MLP sees O(1) numbers
+        return np.log1p(np.maximum(state, 0)).astype(np.float32)
+
+    def _to_decision(self, a: np.ndarray) -> RoundDecision:
+        cfg = self.cfg
+        h = int(round((a[0] + 1) / 2 * (cfg.h_max - 1))) + 1
+        # channel allocations: softmax-ish positive split of the budget
+        w = np.exp(2.0 * a[1:])
+        w = w / w.sum()
+        k_total = max(cfg.n_channels, cfg.k_total_max)
+        ks = np.maximum((w * k_total).astype(int), 1)
+        return RoundDecision(h, [int(k) for k in ks])
+
+    def _make_train_step(self):
+        cfg = self.cfg
+
+        def critic_loss(critic, actor_t, critic_t, s, a, r, s2):
+            a2 = _mlp_apply(actor_t, s2, final_tanh=True)
+            q_next = _mlp_apply(critic_t, jnp.concatenate([s2, a2], -1))[:, 0]
+            y = r + cfg.gamma * q_next                       # Eq. (18)
+            q = _mlp_apply(critic, jnp.concatenate([s, a], -1))[:, 0]
+            return jnp.mean((q - jax.lax.stop_gradient(y)) ** 2)
+
+        def actor_loss(actor, critic, s):
+            a = _mlp_apply(actor, s, final_tanh=True)
+            q = _mlp_apply(critic, jnp.concatenate([s, a], -1))
+            return -jnp.mean(q)
+
+        def step(actor, critic, actor_t, critic_t, opt_a, opt_c, s, a, r, s2):
+            cl, gc = jax.value_and_grad(critic_loss)(critic, actor_t,
+                                                     critic_t, s, a, r, s2)
+            upd, opt_c = adamw_update(self._ocfg, gc, opt_c, critic)
+            critic = apply_updates(critic, upd)
+            al, ga = jax.value_and_grad(actor_loss)(actor, critic, s)
+            upd, opt_a = adamw_update(self._ocfg, ga, opt_a, actor)
+            actor = apply_updates(actor, upd)
+            soft = lambda t, o: jax.tree_util.tree_map(
+                lambda x, y: (1 - cfg.tau) * x + cfg.tau * y, t, o)
+            return actor, critic, soft(actor_t, actor), soft(critic_t, critic), \
+                opt_a, opt_c, cl
+
+        return step
+
+    def _learn(self):
+        s, a, r, s2 = self.buffer.sample(self._rng, self.cfg.batch_size)
+        (self.actor, self.critic, self.actor_t, self.critic_t,
+         self.opt_a, self.opt_c, cl) = self._train_step(
+            self.actor, self.critic, self.actor_t, self.critic_t,
+            self.opt_a, self.opt_c,
+            jnp.asarray(s), jnp.asarray(a), jnp.asarray(r), jnp.asarray(s2))
+        self.critic_losses.append(float(cl))
+
+
+def make_ddpg_controllers(m_devices: int, model_dim: int,
+                          n_channels: int = 3, h_max: int = 8,
+                          sparsity: float = 0.05, seed: int = 0
+                          ) -> list[DDPGController]:
+    """One agent per device (paper: per-device policies)."""
+    return [DDPGController(DDPGConfig(
+        n_channels=n_channels, h_max=h_max,
+        k_total_max=max(n_channels, int(model_dim * sparsity)),
+        seed=seed + 17 * m)) for m in range(m_devices)]

@@ -1,0 +1,58 @@
+"""Error-feedback state for LGC (paper Algorithm 1, lines 8-11).
+
+The device-side update at a synchronization step t in I_m is
+
+    u_m  = e_m + w_m - w_hat_m^{t+1/2}          (net progress + carried error)
+    g_m  = LGC_k(u_m)                           (compressed update, uploaded)
+    e_m' = u_m - g_m                            (error kept for next round)
+
+Between synchronizations e_m is untouched (Algorithm 1 line 17).
+
+The invariant tested by tests/test_compressor.py::test_error_feedback_identity
+is  u == g + e'  exactly (floating-point exact, since g is a masked copy).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .compressor import LGCCompressor
+
+Array = jax.Array
+
+
+class EFState(NamedTuple):
+    """Flat error memory, one vector per FL device (or per shard)."""
+    e: Array  # (D,) float32
+
+
+def init_ef(d: int) -> EFState:
+    return EFState(e=jnp.zeros((d,), jnp.float32))
+
+
+def ef_compress(state: EFState, delta: Array, compressor: LGCCompressor,
+                received: Sequence[bool] | None = None
+                ) -> tuple[Array, EFState]:
+    """One error-compensated compression step.
+
+    Args:
+      state: current error memory e_m.
+      delta: net progress  w_m - w_hat_m^{t+1/2}  (i.e. sum of local LR*grads).
+      compressor: the LGC_k operator for this round.
+      received: optional per-channel delivery mask (channel failure model).
+
+    Returns (g, new_state) where g is the compressed update actually applied
+    at the server and new_state carries u - g_sent.  NOTE: when a channel
+    drops a layer, that layer's mass stays in the error memory (it was not
+    delivered), which is exactly the graceful-degradation property of layered
+    coding: the information is retransmitted (with error feedback) later.
+    """
+    u = state.e + delta
+    g_sent = compressor(u, received)          # what the server receives
+    g_all = compressor(u, None)               # what the device selected
+    # Mass selected but dropped by a channel goes back into the memory too:
+    e_new = u - g_sent if received is not None else u - g_all
+    del g_all
+    return g_sent, EFState(e=e_new)

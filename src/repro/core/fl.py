@@ -1,0 +1,302 @@
+"""Federated learning with Layered Gradient Compression (paper Algorithm 1).
+
+Faithful per-iteration simulator:
+
+    for t in 0..T-1:
+      every device m:   w_hat^{t+1/2} = w_hat^t - eta(t) * grad f_m(w_hat^t; D_m^t)
+      if t+1 in I_m:    u = e_m + w_m - w_hat^{t+1/2}
+                        g_m = LGC_k(u);  upload layers over channels
+                        e_m <- u - g_received
+                        receive global model: w_m, w_hat_m <- w_global
+      else:             w_hat <- w_hat^{t+1/2};  w_m, e_m unchanged
+      server:           w_global <- w_global - (1/M) sum_{m synced} g_m
+
+Asynchronous sync sets I_m with gap(I_m) <= H (paper Definition 1) are
+produced by the per-device controller: after each sync the controller picks
+H_m (next gap, local computation) and D_{m,n} (coordinates per channel).
+
+The simulator accounts energy / money / wall-time per round using the
+multi-channel model in :mod:`repro.core.channels` and supports the paper's
+baselines (FedAvg; LGC with a fixed controller) plus extras (Top-k single
+channel).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .channels import (DEFAULT_CHANNELS, ChannelSpec, DeviceProfile,
+                       comm_cost, comp_cost, sample_channels)
+from .compressor import (LGCCompressor, flatten_tree, tree_size,
+                         unflatten_like, wire_bytes)
+from .error_feedback import EFState, ef_compress
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# model + data interfaces (duck-typed; see repro.models.lr/cnn/rnn)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FLTask:
+    """A learning task: init/loss/eval + per-device data shards."""
+    init: Callable[[Array], dict]                      # key -> params pytree
+    loss_fn: Callable[[dict, tuple], Array]            # (params, batch) -> scalar
+    metric_fn: Callable[[dict, tuple], Array]          # accuracy (or -loss)
+    device_data: Sequence[tuple[np.ndarray, np.ndarray]]  # per-device (X, y)
+    eval_data: tuple[np.ndarray, np.ndarray]
+    name: str = "task"
+
+
+@dataclasses.dataclass
+class FLConfig:
+    rounds: int = 500                  # T: global iteration budget
+    batch_size: int = 64               # b (paper: 64)
+    lr: float = 0.01                   # paper: 0.01
+    lr_decay_a: float = 200.0          # eta(t) = lr * a / (a + t) (decaying)
+    max_gap: int = 8                   # H: uniform bound on gap(I_m)
+    channels: Sequence[ChannelSpec] = DEFAULT_CHANNELS
+    device_profiles: Sequence[DeviceProfile] | None = None
+    seed: int = 0
+    eval_every: int = 10
+    value_bytes: int = 4               # fp32 values on the wire
+    index_bytes: int = 4
+
+
+@dataclasses.dataclass
+class RoundDecision:
+    """Controller output for one device for its next sync window."""
+    h: int                              # local steps until next sync
+    ks: Sequence[int]                   # coordinates per channel (layer sizes)
+
+
+class FixedController:
+    """LGC without DRL: fixed local computation + fixed traffic allocation."""
+
+    def __init__(self, h: int, ks: Sequence[int]):
+        self.h, self.ks = h, list(ks)
+
+    def act(self, state: np.ndarray) -> RoundDecision:
+        return RoundDecision(self.h, self.ks)
+
+    def observe(self, *a, **k):  # no learning
+        pass
+
+
+@dataclasses.dataclass
+class History:
+    """Recorded metrics, one entry per eval point / per sync."""
+    step: list[int] = dataclasses.field(default_factory=list)
+    loss: list[float] = dataclasses.field(default_factory=list)
+    accuracy: list[float] = dataclasses.field(default_factory=list)
+    energy_j: list[float] = dataclasses.field(default_factory=list)
+    money: list[float] = dataclasses.field(default_factory=list)
+    time_s: list[float] = dataclasses.field(default_factory=list)
+    uplink_mb: list[float] = dataclasses.field(default_factory=list)
+    rewards: list[float] = dataclasses.field(default_factory=list)
+    drl_loss: list[float] = dataclasses.field(default_factory=list)
+
+    def asdict(self):
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# the simulator
+# ---------------------------------------------------------------------------
+
+class LGCSimulator:
+    """Runs Algorithm 1 for M devices with per-device controllers."""
+
+    def __init__(self, task: FLTask, cfg: FLConfig,
+                 controllers: Sequence, mode: str = "lgc"):
+        """mode: 'lgc' (layered, multi-channel), 'topk' (single channel),
+        'fedavg' (dense upload, fastest channel, no compression)."""
+        self.task, self.cfg, self.mode = task, cfg, mode
+        self.controllers = list(controllers)
+        self.m_devices = len(task.device_data)
+        assert len(self.controllers) == self.m_devices
+        key = jax.random.PRNGKey(cfg.seed)
+        self.params = task.init(key)                 # global model  w_global
+        self.d = tree_size(self.params)
+        profiles = cfg.device_profiles or [DeviceProfile()] * self.m_devices
+        self.profiles = profiles
+
+        # per-device state (Algorithm 1 line 1)
+        self.w_hat = [self.params for _ in range(self.m_devices)]
+        self.w_anchor = [flatten_tree(self.params) for _ in range(self.m_devices)]
+        self.ef = [EFState(jnp.zeros((self.d,), jnp.float32))
+                   for _ in range(self.m_devices)]
+        self.next_sync = [0] * self.m_devices        # t at which device syncs
+        self.decisions = [None] * self.m_devices
+        self.spend = [dict(energy_j=0.0, money=0.0, time_s=0.0, mb=0.0)
+                      for _ in range(self.m_devices)]
+        self.prev_loss = [None] * self.m_devices
+
+        self._sgd_step = jax.jit(self._make_sgd_step())
+        self._eval = jax.jit(self._make_eval())
+        self._rng = np.random.default_rng(cfg.seed)
+        self._key = jax.random.PRNGKey(cfg.seed + 1)
+
+    # -- jitted pieces ------------------------------------------------------
+    def _make_sgd_step(self):
+        loss_fn = self.task.loss_fn
+
+        def step(params, batch, eta):
+            g = jax.grad(loss_fn)(params, batch)
+            return jax.tree_util.tree_map(lambda p, gi: p - eta * gi, params, g)
+        return step
+
+    def _make_eval(self):
+        def ev(params, batch):
+            return self.task.loss_fn(params, batch), self.task.metric_fn(params, batch)
+        return ev
+
+    # -- helpers ------------------------------------------------------------
+    def _eta(self, t: int) -> float:
+        a = self.cfg.lr_decay_a
+        return self.cfg.lr * a / (a + t)
+
+    def _sample_batch(self, m: int):
+        x, y = self.task.device_data[m]
+        idx = self._rng.integers(0, x.shape[0], self.cfg.batch_size)
+        return jnp.asarray(x[idx]), jnp.asarray(y[idx])
+
+    def _controller_state(self, m: int) -> np.ndarray:
+        s = self.spend[m]
+        return np.array([s["energy_j"], s["money"], s["time_s"], s["mb"]],
+                        np.float32)
+
+    def _decide(self, m: int, t: int):
+        dec = self.controllers[m].act(self._controller_state(m))
+        h = int(np.clip(dec.h, 1, self.cfg.max_gap))
+        self.decisions[m] = RoundDecision(h, dec.ks)
+        self.next_sync[m] = t + h
+
+    # -- main loop ----------------------------------------------------------
+    def run(self) -> History:
+        hist = History()
+        cfg = self.cfg
+        for m in range(self.m_devices):
+            self._decide(m, 0)
+        for t in range(cfg.rounds):
+            eta = self._eta(t)
+            updates, costs = [], []
+            for m in range(self.m_devices):
+                batch = self._sample_batch(m)
+                self.w_hat[m] = self._sgd_step(self.w_hat[m], batch,
+                                               jnp.float32(eta))
+                if t + 1 >= self.next_sync[m]:
+                    g, cost = self._sync_device(m, t)
+                    updates.append(g)
+                    costs.append((m, cost))
+            if updates:
+                g_mean = sum(updates) / self.m_devices
+                flat = flatten_tree(self.params) - g_mean
+                self.params = unflatten_like(flat, self.params)
+                for m, _ in costs:
+                    # broadcast: device adopts the global model
+                    self.w_hat[m] = self.params
+                    self.w_anchor[m] = flatten_tree(self.params)
+                    self._reward_and_decide(m, t)
+            if t % cfg.eval_every == 0 or t == cfg.rounds - 1:
+                self._record(hist, t)
+        return hist
+
+    def _sync_device(self, m: int, t: int):
+        dec = self.decisions[m]
+        self._key, k_ch = jax.random.split(self._key)
+        ch = sample_channels(k_ch, self.cfg.channels)
+        delta = self.w_anchor[m] - flatten_tree(self.w_hat[m])  # w_m - w_hat^{t+1/2}
+
+        if self.mode == "lgc_q8":
+            # LGC + QSGD int8 values on the wire (composes under EF):
+            # wire = k * (1 value byte + 4 index bytes) per channel
+            ks = list(dec.ks)
+            comp = LGCCompressor(ks)
+            received = [bool(u) for u in np.asarray(ch.up)][:len(ks)]
+            received += [True] * (len(ks) - len(received))
+            g, self.ef[m] = ef_compress(self.ef[m], delta, comp, received)
+            from .compressor import qsgd_dequantize, qsgd_quantize
+            self._key, kq = jax.random.split(self._key)
+            q, scale = qsgd_quantize(g, kq)
+            g_deq = qsgd_dequantize(q, scale)
+            # quantization residual stays in the error memory
+            self.ef[m] = EFState(self.ef[m].e + (g - g_deq))
+            g = g_deq
+            nbytes = wire_bytes(ks, 1, self.cfg.index_bytes)
+            nbytes = [b if r else 0 for b, r in zip(nbytes, received)]
+            cost = comm_cost(ch, nbytes)
+        elif self.mode == "fedavg":
+            g = delta  # dense, no error feedback
+            # full model over the single fastest *up* channel
+            bw = np.asarray(ch.bandwidth_mb_s) * np.asarray(ch.up)
+            best = int(np.argmax(bw))
+            nbytes = [0] * len(self.cfg.channels)
+            nbytes[best] = self.d * self.cfg.value_bytes
+            cost = comm_cost(ch, nbytes)
+        else:
+            if self.mode == "topk":
+                ks = [sum(dec.ks)] + [0] * (len(dec.ks) - 1)
+            else:
+                ks = list(dec.ks)
+            comp = LGCCompressor(ks)
+            received = [bool(u) for u in np.asarray(ch.up)][:len(ks)]
+            received += [True] * (len(ks) - len(received))
+            g, self.ef[m] = ef_compress(self.ef[m], delta, comp, received)
+            nbytes = wire_bytes(ks, self.cfg.value_bytes, self.cfg.index_bytes)
+            nbytes = [b if r else 0 for b, r in zip(nbytes, received)]
+            cost = comm_cost(ch, nbytes)
+
+        ccomp = comp_cost(self.profiles[m], dec.h)
+        total = {
+            "energy_j": float(cost["energy_j"]) + ccomp["energy_j"],
+            "money": float(cost["money"]) + ccomp["money"],
+            "time_s": float(cost["time_s"]) + ccomp["time_s"],
+            "mb": float(sum(nbytes)) / 1e6,
+        }
+        for k, v in total.items():
+            self.spend[m][k] += v
+        return g, total
+
+    def _reward_and_decide(self, m: int, t: int):
+        """Reward Eq. (14)-(16): utility = (loss drop) / (resource spend)."""
+        xb, yb = self.task.eval_data
+        idx = self._rng.integers(0, xb.shape[0], min(512, xb.shape[0]))
+        loss, _ = self._eval(self.params, (jnp.asarray(xb[idx]),
+                                           jnp.asarray(yb[idx])))
+        loss = float(loss)
+        ctrl = self.controllers[m]
+        if self.prev_loss[m] is not None and hasattr(ctrl, "reward"):
+            ctrl.reward(self.prev_loss[m] - loss, self._controller_state(m))
+        self.prev_loss[m] = loss
+        self._decide(m, t + 1)
+
+    def _record(self, hist: History, t: int):
+        xb, yb = self.task.eval_data
+        idx = self._rng.integers(0, xb.shape[0], min(2048, xb.shape[0]))
+        loss, acc = self._eval(self.params, (jnp.asarray(xb[idx]),
+                                             jnp.asarray(yb[idx])))
+        hist.step.append(t)
+        hist.loss.append(float(loss))
+        hist.accuracy.append(float(acc))
+        hist.energy_j.append(sum(s["energy_j"] for s in self.spend))
+        hist.money.append(sum(s["money"] for s in self.spend))
+        hist.time_s.append(max(s["time_s"] for s in self.spend))
+        hist.uplink_mb.append(sum(s["mb"] for s in self.spend))
+
+
+def run_baseline(task: FLTask, cfg: FLConfig, mode: str,
+                 h: int = 4, ks: Sequence[int] | None = None) -> History:
+    """Convenience: FedAvg / LGC-noDRL / Top-k with fixed controllers."""
+    m = len(task.device_data)
+    if ks is None:
+        d = tree_size(task.init(jax.random.PRNGKey(0)))
+        k_total = max(1, d // 20)                      # 5% sparsity default
+        ks = [k_total // 2, k_total // 4, k_total - k_total // 2 - k_total // 4]
+    ctrls = [FixedController(h, ks) for _ in range(m)]
+    return LGCSimulator(task, cfg, ctrls, mode=mode).run()

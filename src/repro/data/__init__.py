@@ -1,0 +1,10 @@
+"""Data pipelines: synthetic MNIST, embedded Shakespeare, LM token streams."""
+from .mnist import load_synthetic_mnist, partition_iid, partition_noniid
+from .shakespeare import CHAR_VOCAB, char_batches, load_shakespeare
+from .tokens import TokenPipeline, synthetic_token_batch
+
+__all__ = [
+    "load_synthetic_mnist", "partition_iid", "partition_noniid",
+    "CHAR_VOCAB", "char_batches", "load_shakespeare",
+    "TokenPipeline", "synthetic_token_batch",
+]

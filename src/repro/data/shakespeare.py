@@ -1,0 +1,103 @@
+"""Shakespeare character-LM data (paper Fig. 6, RNN task).
+
+The container is offline, so we embed a public-domain excerpt (sonnets +
+play fragments) and tile it with light stochastic re-ordering to reach the
+requested corpus size.  Character-level vocabulary mirrors the LEAF /
+FedML Shakespeare setup the paper uses.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_EXCERPT = """
+Shall I compare thee to a summer's day?
+Thou art more lovely and more temperate:
+Rough winds do shake the darling buds of May,
+And summer's lease hath all too short a date;
+Sometime too hot the eye of heaven shines,
+And often is his gold complexion dimm'd;
+And every fair from fair sometime declines,
+By chance or nature's changing course untrimm'd;
+But thy eternal summer shall not fade,
+Nor lose possession of that fair thou ow'st;
+Nor shall death brag thou wander'st in his shade,
+When in eternal lines to time thou grow'st:
+So long as men can breathe or eyes can see,
+So long lives this, and this gives life to thee.
+
+To be, or not to be, that is the question:
+Whether 'tis nobler in the mind to suffer
+The slings and arrows of outrageous fortune,
+Or to take arms against a sea of troubles
+And by opposing end them. To die: to sleep;
+No more; and by a sleep to say we end
+The heart-ache and the thousand natural shocks
+That flesh is heir to, 'tis a consummation
+Devoutly to be wish'd. To die, to sleep;
+To sleep: perchance to dream: ay, there's the rub;
+For in that sleep of death what dreams may come
+When we have shuffled off this mortal coil,
+Must give us pause: there's the respect
+That makes calamity of so long life;
+
+All the world's a stage,
+And all the men and women merely players;
+They have their exits and their entrances,
+And one man in his time plays many parts,
+His acts being seven ages. At first the infant,
+Mewling and puking in the nurse's arms;
+And then the whining school-boy, with his satchel
+And shining morning face, creeping like snail
+Unwillingly to school. And then the lover,
+Sighing like furnace, with a woeful ballad
+Made to his mistress' eyebrow. Then a soldier,
+Full of strange oaths, and bearded like the pard,
+Jealous in honour, sudden and quick in quarrel,
+Seeking the bubble reputation
+Even in the cannon's mouth.
+
+Friends, Romans, countrymen, lend me your ears;
+I come to bury Caesar, not to praise him.
+The evil that men do lives after them;
+The good is oft interred with their bones;
+So let it be with Caesar. The noble Brutus
+Hath told you Caesar was ambitious:
+If it were so, it was a grievous fault,
+And grievously hath Caesar answer'd it.
+
+Now is the winter of our discontent
+Made glorious summer by this sun of York;
+And all the clouds that lour'd upon our house
+In the deep bosom of the ocean buried.
+Now are our brows bound with victorious wreaths;
+Our bruised arms hung up for monuments;
+Our stern alarums changed to merry meetings,
+Our dreadful marches to delightful measures.
+"""
+
+CHAR_VOCAB = sorted(set(_EXCERPT))
+_STOI = {c: i for i, c in enumerate(CHAR_VOCAB)}
+VOCAB_SIZE = len(CHAR_VOCAB)
+
+
+def load_shakespeare(n_chars: int = 200_000, seed: int = 0) -> np.ndarray:
+    """Return an int32 token stream of ~n_chars characters."""
+    rng = np.random.default_rng(seed)
+    lines = [l for l in _EXCERPT.strip().split("\n\n")]
+    chunks = []
+    total = 0
+    while total < n_chars:
+        li = rng.integers(0, len(lines))
+        chunks.append(lines[li] + "\n\n")
+        total += len(chunks[-1])
+    text = "".join(chunks)[:n_chars]
+    return np.array([_STOI[c] for c in text], np.int32)
+
+
+def char_batches(stream: np.ndarray, batch: int, seq: int,
+                 rng: np.random.Generator) -> tuple[np.ndarray, np.ndarray]:
+    """Sample (inputs, targets) next-char pairs of shape (batch, seq)."""
+    starts = rng.integers(0, stream.shape[0] - seq - 1, batch)
+    x = np.stack([stream[s:s + seq] for s in starts])
+    y = np.stack([stream[s + 1:s + seq + 1] for s in starts])
+    return x, y

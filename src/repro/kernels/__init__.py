@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the LGC compression hot path + decode attention.
+
+Kernels (each validated against ref.py oracles in interpret mode):
+  topk_threshold   -- maxabs + 256-bin magnitude histogram (2-pass Top_k)
+  layered_sparsify -- fused layered sparsify + error-feedback update
+  swa_attention    -- sliding-window flash decode attention (long_500k)
+"""
+from .ops import lgc_compress_hist, lgc_compress_hist_ref, selected_counts
+from .topk_threshold import histogram, maxabs, thresholds_from_counts
+from .layered_sparsify import sparsify_ef
+
+__all__ = [
+    "lgc_compress_hist", "lgc_compress_hist_ref", "selected_counts",
+    "histogram", "maxabs", "thresholds_from_counts", "sparsify_ef",
+]

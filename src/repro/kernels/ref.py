@@ -1,0 +1,125 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Two families of semantics:
+
+* ``*_exact``  -- rank-exact Top_k semantics (the paper's definition), used
+  to bound the approximation error of the histogram path.
+* ``hist_*``   -- histogram-threshold semantics.  The Pallas kernels must
+  match these *bit-exactly* (same bins, same edges); tests assert allclose
+  with zero/epsilon tolerance against these.
+
+The histogram method is the TPU-native adaptation of Top_k (DESIGN.md §3):
+a 2-pass max-abs + 256-bin magnitude histogram replaces the global sort.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+N_BINS = 256
+
+
+# ---------------------------------------------------------------------------
+# histogram threshold selection
+# ---------------------------------------------------------------------------
+
+def hist_maxabs(x: Array) -> Array:
+    return jnp.max(jnp.abs(x)).astype(jnp.float32)
+
+
+def hist_counts(x: Array, maxabs: Array) -> Array:
+    """256-bin histogram of |x| over [0, maxabs]; bin 255 holds the largest."""
+    a = jnp.abs(x).astype(jnp.float32)
+    scale = jnp.where(maxabs > 0, N_BINS / maxabs, 0.0)
+    bins = jnp.clip((a * scale).astype(jnp.int32), 0, N_BINS - 1)
+    return jnp.zeros((N_BINS,), jnp.int32).at[bins].add(1)
+
+
+def hist_thresholds(counts: Array, maxabs: Array, cum_ks: Array) -> Array:
+    """Per-layer-boundary magnitude thresholds from a histogram.
+
+    cum_ks: (C,) int32 cumulative budgets K_c = k_1 + ... + k_c.
+    Returns thr: (C,) f32 where #{|x| > thr[c]} >= K_c and the overshoot is
+    bounded by the mass of one bin.  thr[c] is a bin lower edge.
+    """
+    # count of elements in bins >= b, for each bin b  (descending cumulative)
+    desc = jnp.cumsum(counts[::-1])[::-1]          # desc[b] = #{bin >= b}
+    bin_w = maxabs / N_BINS
+
+    def one(k):
+        # smallest bin index b such that desc[b] >= k -> keep |x| > edge(b)
+        ok = desc >= k
+        b = jnp.where(jnp.any(ok), jnp.max(jnp.where(
+            ok, jnp.arange(N_BINS), -1)), 0)
+        return (b.astype(jnp.float32)) * bin_w
+    return jax.vmap(one)(cum_ks).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# layered sparsify + fused error feedback (histogram semantics)
+# ---------------------------------------------------------------------------
+
+def hist_layered_sparsify(u: Array, thr: Array, received: Array) -> tuple[Array, Array]:
+    """g = sum of received layers, e_new = u - g.
+
+    Layer c keeps thr[c-1] >= |u| > thr[c] with thr[-1] := +inf.
+    thr: (C,) descending bin-edge thresholds; received: (C,) bool/int.
+    """
+    a = jnp.abs(u)
+    hi = jnp.concatenate([jnp.array([jnp.inf], jnp.float32), thr[:-1]])
+    g = jnp.zeros_like(u)
+    for c in range(thr.shape[0]):
+        mask = (a <= hi[c]) & (a > thr[c])
+        g = g + jnp.where(mask & (received[c] > 0), u, 0.0)
+    return g, u - g
+
+
+def hist_lgc_compress(e: Array, delta: Array, cum_ks: Array,
+                      received: Array) -> tuple[Array, Array]:
+    """Full histogram-LGC pipeline on flat vectors (the fused-kernel oracle).
+
+    u = e + delta; thresholds from histogram of |u|; g = received layers;
+    e_new = u - g.
+    """
+    u = (e + delta).astype(jnp.float32)
+    m = hist_maxabs(u)
+    counts = hist_counts(u, m)
+    thr = hist_thresholds(counts, m, cum_ks)
+    return hist_layered_sparsify(u, thr, received)
+
+
+# ---------------------------------------------------------------------------
+# exact oracle (for approximation-quality bounds, not kernel equality)
+# ---------------------------------------------------------------------------
+
+def exact_lgc_compress(e: Array, delta: Array, cum_ks: Array,
+                       received: Array) -> tuple[Array, Array]:
+    from repro.core.compressor import lgc_layers
+    u = (e + delta).astype(jnp.float32)
+    ks = jnp.diff(jnp.concatenate([jnp.zeros((1,), cum_ks.dtype), cum_ks]))
+    layers = lgc_layers(u, [int(k) for k in ks])
+    g = sum(jnp.where(received[c] > 0, layers[c], 0.0)
+            for c in range(len(layers)))
+    return g, u - g
+
+
+# ---------------------------------------------------------------------------
+# sliding-window attention oracle (decode: 1 query vs window cache)
+# ---------------------------------------------------------------------------
+
+def swa_decode_ref(q: Array, k: Array, v: Array, length: Array | None = None
+                   ) -> Array:
+    """q: (B,H,Dh); k,v: (B,H,W,Dh); optional valid length per batch (B,).
+
+    Numerically-stable softmax attention of the single new token over the
+    window cache.  Oracle for kernels/swa_attention.py.
+    """
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(q.dtype)
+    logits = jnp.einsum("bhd,bhwd->bhw", q, k) * scale
+    if length is not None:
+        w = k.shape[2]
+        mask = jnp.arange(w)[None, None, :] < length[:, None, None]
+        logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(v.dtype)
+    return jnp.einsum("bhw,bhwd->bhd", p, v)

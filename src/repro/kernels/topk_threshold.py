@@ -1,0 +1,114 @@
+"""Pallas TPU kernels: magnitude statistics for histogram-Top_k selection.
+
+TPU-native replacement for the global sort behind Top_k (DESIGN.md §3):
+
+  pass 1: ``maxabs``    -- blocked max-|x| reduction
+  pass 2: ``histogram`` -- blocked 256-bin magnitude histogram
+  host    : thresholds from the descending histogram CDF (256 scalars)
+
+Both kernels view the flat gradient as a (rows, 128)-shaped matrix -- the
+TPU vector-lane layout -- and tile over row blocks held in VMEM.  The
+histogram scatter is expressed as a one-hot contraction (bins x lanes),
+which maps onto the VPU instead of a serial scatter.
+
+Grid iteration on TPU is sequential per core, so both kernels accumulate
+into their (revisited) output block across grid steps; ``@pl.when(step==0)``
+initialises it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N_BINS = 256
+LANES = 128
+
+
+def _maxabs_kernel(x_ref, o_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+    block_max = jnp.max(jnp.abs(x_ref[...].astype(jnp.float32)))
+    o_ref[0, 0] = jnp.maximum(o_ref[0, 0], block_max)
+
+
+def _hist_kernel(x_ref, maxabs_ref, o_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+    a = jnp.abs(x_ref[...].astype(jnp.float32))        # (rows, 128)
+    m = maxabs_ref[0, 0]
+    scale = jnp.where(m > 0, N_BINS / m, 0.0)
+    bins = jnp.clip((a * scale).astype(jnp.int32), 0, N_BINS - 1)
+    # one-hot contraction: counts[b] = sum_ij [bins_ij == b]
+    bin_ids = jax.lax.broadcasted_iota(jnp.int32, (N_BINS, 1, 1), 0)
+    onehot = (bins[None, :, :] == bin_ids).astype(jnp.int32)
+    o_ref[...] += jnp.sum(onehot, axis=(1, 2))[None, :]
+
+
+def _as_rows(x: jax.Array, block_rows: int) -> tuple[jax.Array, int, int]:
+    """Pad flat x with zeros to a (rows,128) matrix, rows % block_rows == 0."""
+    d = x.shape[0]
+    per_block = block_rows * LANES
+    padded = (d + per_block - 1) // per_block * per_block
+    pad = padded - d
+    xr = jnp.pad(x, (0, pad)).reshape(-1, LANES)
+    return xr, xr.shape[0] // block_rows, pad
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def maxabs(x: jax.Array, *, block_rows: int = 64,
+           interpret: bool = True) -> jax.Array:
+    """max |x| over a flat vector. Returns (1,1) f32."""
+    xr, n_blocks, _ = _as_rows(x, block_rows)
+    return pl.pallas_call(
+        _maxabs_kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(xr)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def histogram(x: jax.Array, maxabs_val: jax.Array, *, block_rows: int = 64,
+              interpret: bool = True) -> jax.Array:
+    """256-bin |x| histogram; padding-corrected. Returns (256,) int32."""
+    xr, n_blocks, pad = _as_rows(x, block_rows)
+    counts = pl.pallas_call(
+        _hist_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, N_BINS), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, N_BINS), jnp.int32),
+        interpret=interpret,
+    )(xr, maxabs_val.reshape(1, 1))[0]
+    return counts.at[0].add(-pad)  # zero padding lands in bin 0
+
+
+def thresholds_from_counts(counts: jax.Array, maxabs_val: jax.Array,
+                           cum_ks: jax.Array) -> jax.Array:
+    """Host-side (tiny): per-layer thresholds from the histogram CDF.
+
+    Identical semantics to ref.hist_thresholds.
+    """
+    desc = jnp.cumsum(counts[::-1])[::-1]
+    bin_w = maxabs_val.reshape(()) / N_BINS
+
+    def one(k):
+        ok = desc >= k
+        b = jnp.where(jnp.any(ok),
+                      jnp.max(jnp.where(ok, jnp.arange(N_BINS), -1)), 0)
+        return b.astype(jnp.float32) * bin_w
+    return jax.vmap(one)(cum_ks).astype(jnp.float32)

@@ -1,0 +1,4 @@
+"""Distributed runtime: meshes, input shapes, step functions, dry-run."""
+from .mesh import fl_axis_name, make_host_mesh, make_production_mesh
+
+__all__ = ["fl_axis_name", "make_host_mesh", "make_production_mesh"]

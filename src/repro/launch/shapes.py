@@ -1,0 +1,99 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins (no allocation).
+
+  train_4k     seq_len=4,096    global_batch=256   -> train_step
+  prefill_32k  seq_len=32,768   global_batch=32    -> prefill_step
+  decode_32k   seq_len=32,768   global_batch=128   -> serve_step (1 token,
+                                                      KV cache of seq_len)
+  long_500k    seq_len=524,288  global_batch=1     -> serve_step with
+               sub-quadratic state: SSM/hybrid native, dense archs via the
+               sliding-window cache (cfg.window), DESIGN.md §4.
+
+``input_specs(cfg, shape)`` returns a dict of jax.ShapeDtypeStruct matching
+the step function's runtime inputs -- weak-type-correct, shardable, and
+never materialised.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+VIS_STUB_DIM = 1024     # CLIP ViT-L/14 feature width (stub frontend)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def token_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """Train/prefill token inputs (+ modality prefix stubs)."""
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": _sds((b, s), jnp.int32)}
+    if shape.kind == "train":
+        out["labels"] = _sds((b, s), jnp.int32)
+    if cfg.arch_type == "vlm":
+        out["prefix"] = _sds((b, cfg.n_prefix_tokens, VIS_STUB_DIM), cfg.dtype)
+    if cfg.arch_type == "audio":
+        out["prefix"] = _sds((b, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    return out
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """serve_step inputs: one new token + a cache of shape.seq_len context.
+
+    long_500k uses the ring-buffer window cache (cfg.window) for attention
+    archs -- sub-linear memory AND sub-quadratic compute; SSM state caches
+    are O(1) in seq regardless.
+    """
+    b = shape.global_batch
+    is_long = shape.seq_len > 65_536
+    cache_len = min(shape.seq_len, cfg.window) if is_long else shape.seq_len
+    cache = jax.eval_shape(lambda: tf.init_cache(cfg, b, cache_len))
+    return {"token": _sds((b, 1), jnp.int32), "cache": cache}
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode":
+        return decode_specs(cfg, shape)
+    return token_specs(cfg, shape)
+
+
+def concrete_batch(cfg: ArchConfig, shape_name: str, key=None) -> dict:
+    """Materialise a random batch matching input_specs (small shapes only)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    specs = input_specs(cfg, shape_name)
+
+    def make(s):
+        if s.dtype == jnp.int32:
+            return jax.random.randint(key, s.shape, 0, max(cfg.vocab_size, 2))
+        return jax.random.normal(key, s.shape, s.dtype)
+    return jax.tree_util.tree_map(make, specs)
+
+
+def window_for(cfg: ArchConfig, shape_name: str) -> int:
+    """Window argument passed to decode_step: nonzero only for long_500k."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode" and shape.seq_len > 65_536:
+        return cfg.window
+    return 0

@@ -1,0 +1,168 @@
+"""Partition-spec trees for params, optimizer states, caches and batches.
+
+Rules (Megatron-style tensor parallel on ``model`` + optional ZeRO-3 FSDP on
+``data`` for >=4B archs, cfg.fsdp):
+
+  embed (V,D)            -> ("model", None)          vocab-parallel
+  lm_head (D,V)          -> (fsdp, "model")
+  attn  wq/wk/wv (D,HK)  -> (fsdp, "model")    wo (HK,D) -> ("model", fsdp)
+  mlp   up/gate (D,F)    -> (fsdp, "model")  down (F,D) -> ("model", fsdp)
+  MoE experts (E,D,F)    -> expert-parallel ("model" on E) when E divides the
+                            model axis; otherwise tensor-parallel on F
+  ssm in_proj (D,P)      -> (fsdp, "model")  out_proj -> ("model", fsdp)
+  norms / scalars        -> replicated
+
+Stacked blocks carry a leading L axis -> specs get a leading None.
+KV caches shard batch on "data" (when divisible) and the cache sequence axis
+on "model" (sequence-parallel decode attention: works for any kv-head count).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+Tree = Any
+
+
+def _axis_size(mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def param_specs(cfg: ArchConfig, params: Tree, mesh) -> Tree:
+    """Spec tree matching ``params`` (built from its key paths)."""
+    fsdp = "data" if cfg.fsdp else None
+    model_n = _axis_size(mesh, "model")
+    expert_parallel = cfg.n_experts > 0 and cfg.n_experts % model_n == 0
+
+    def rule(path, leaf) -> P:
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = names[-1]
+        stacked = names[0] in ("blocks", "enc_blocks")
+        under_expert = "experts" in names
+
+        def wrap(*spec):
+            """Prefix the stacked-layer None (and expert dim for experts)."""
+            out = list(spec)
+            if under_expert:
+                e_axis = "model" if expert_parallel else None
+                out = [e_axis] + out
+            if stacked:
+                out = [None] + out
+            # trim/pad to leaf rank
+            out = out[: leaf.ndim]
+            out += [None] * (leaf.ndim - len(out))
+            return P(*out)
+
+        if name == "embed":
+            return P("model", None)
+        if name == "lm_head":
+            return P(fsdp, "model")
+        if name == "vis_proj":
+            return P(None, "model")
+        if name in ("enc_pos", "dec_pos"):
+            return P(None, None)
+        if name in ("wq", "wk", "wv"):
+            return wrap(fsdp, "model")
+        if name == "wo":
+            return wrap("model", fsdp)
+        if name in ("bq", "bk", "bv"):
+            return wrap("model")
+        if name in ("w_gate", "w_up"):
+            if under_expert and expert_parallel:
+                return wrap(fsdp, None)
+            if under_expert:
+                return wrap(fsdp, "model")
+            return wrap(fsdp, "model")
+        if name == "w_down":
+            if under_expert and expert_parallel:
+                return wrap(None, fsdp)
+            return wrap("model", fsdp)
+        if name == "b_up":
+            if under_expert and expert_parallel:
+                return wrap(None)
+            return wrap("model")
+        if name == "router":
+            return wrap(fsdp, None)
+        if name == "in_proj":
+            return wrap(fsdp, "model")
+        if name == "out_proj":
+            return wrap("model", fsdp)
+        # norms, biases, conv weights, ssm scalars, everything small
+        return wrap()
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def opt_state_specs(param_spec_tree: Tree, opt_state) -> Tree:
+    """Optimizer-state specs: moments inherit the param spec, step is P()."""
+    from repro.optim.optimizers import AdamWState, SGDMState, SGDState
+    if isinstance(opt_state, AdamWState):
+        return AdamWState(P(), param_spec_tree, param_spec_tree)
+    if isinstance(opt_state, SGDMState):
+        return SGDMState(P(), param_spec_tree)
+    return SGDState(P())
+
+
+def batch_specs(cfg: ArchConfig, batch: dict, mesh,
+                include_pod: bool = True) -> dict:
+    """Token batches: batch axis over ("pod","data") when divisible."""
+    dp = _axis_size(mesh, "data")
+    pods = _axis_size(mesh, "pod") if include_pod else 1
+    out = {}
+    for k, v in batch.items():
+        b = v.shape[0]
+        if b % (dp * pods) == 0:
+            ax = ("pod", "data") if (pods > 1 and include_pod) else "data"
+        elif b % dp == 0:
+            ax = "data"
+        else:
+            ax = None
+        out[k] = P(ax, *([None] * (v.ndim - 1)))
+    return out
+
+
+def cache_specs(cfg: ArchConfig, cache: Tree, mesh) -> Tree:
+    """Decode-cache specs (see module docstring)."""
+    dp = _axis_size(mesh, "data")
+    model_n = _axis_size(mesh, "model")
+
+    def rule(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = names[-1]
+        if name == "pos":
+            return P()
+        batch_ok = leaf.ndim >= 2 and leaf.shape[1] % dp == 0
+        b_ax = "data" if batch_ok else None
+        if name in ("k", "v"):                    # (L, B, Kv, S, hd)
+            s_ax = "model" if leaf.shape[3] % model_n == 0 else None
+            return P(None, b_ax, None, s_ax, None)
+        if name in ("cross_k", "cross_v"):        # (L, B, H, Senc, hd)
+            return P(None, b_ax, None, None, None)
+        if name == "conv":                        # (L, B, K-1, C)
+            c_ax = "model" if leaf.shape[3] % model_n == 0 else None
+            return P(None, b_ax, None, c_ax)
+        if name == "state":                       # (L, B, H, P, N)
+            h_ax = "model" if leaf.shape[2] % model_n == 0 else None
+            return P(None, b_ax, h_ax, None, None)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+def ef_specs(param_spec_tree: Tree) -> Tree:
+    """Error-feedback memory: same layout as params."""
+    return param_spec_tree
+
+
+def place(tree: Tree, spec_tree: Tree, mesh) -> Tree:
+    """device_put a concrete pytree onto its spec'd shardings (jit with
+    in_shardings requires committed args to match exactly)."""
+    shardings = jax.tree_util.tree_map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    return jax.device_put(tree, shardings)

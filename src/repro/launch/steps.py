@@ -1,0 +1,419 @@
+"""Step functions: sync train, LGC train (the paper's technique), prefill,
+serve -- all pjit/shard_map-ready.
+
+The LGC step is the paper's Algorithm 1 mapped onto the mesh (DESIGN.md §3):
+the FL-device axis is the slow axis ("pod" on the multi-pod mesh, "data" on
+the single-pod mesh).  ``jax.shard_map`` is *manual* over that axis only --
+inside, each FL device runs H local SGD steps on its own microbatches,
+compresses its net progress with histogram-LGC + error feedback (per-tensor,
+preserving every tensor's sharding over the auto axes), and the layers are
+exchanged explicitly:
+
+  * aggregate="dense_masked":  psum of the masked dense gradient -- the
+    functional equivalent of the paper's server sum (full wire bytes).
+  * aggregate="sparse_gather": per layer c an all_gather of fixed-k
+    (values, indices) + scatter-add -- the layered multi-channel
+    transmission, cutting collective bytes by ~D/(2 sum k_c).
+  * aggregate="none":          FedAvg baseline (dense delta, no compression).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ref as kref
+from repro.models import transformer as tf
+from repro.optim.optimizers import (OptimizerConfig, apply_updates,
+                                    get_optimizer)
+from .mesh import fl_axis_name
+
+Array = jax.Array
+
+# per-arch gradient-accumulation defaults for train_4k on the 256-chip pod
+# (keeps the scan-carry activation stash under ~8 GB/chip; DESIGN.md §5)
+ACCUM_STEPS = {
+    "glm4-9b": 4, "yi-34b": 8, "grok-1-314b": 8, "starcoder2-7b": 4,
+    "phi-3-vision-4.2b": 4, "olmoe-1b-7b": 2, "qwen2-1.5b": 2,
+    "mamba2-370m": 2, "zamba2-1.2b": 2, "whisper-small": 2,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class LGCStepConfig:
+    local_steps: int = 4                   # H: local SGD steps per sync
+    local_lr: float = 1e-3
+    sparsity: tuple = (0.01, 0.02, 0.02)   # per-channel k_c / D fractions
+    # dense_masked | sparse_gather | bucket_sparse | none
+    aggregate: str = "dense_masked"
+    ef_dtype: str = "float32"
+    # I-C7: exchange the masked update in bf16 (EF keeps the f32 residual,
+    # including the rounding error -- error feedback absorbs quantisation
+    # exactly like sparsification).  Halves cross-pod bytes for the
+    # dense_masked mode on TPU.  Default f32 because XLA:CPU's
+    # AllReducePromotion pass aborts on bf16 all-reduce ("Invalid binary
+    # instruction opcode copy") -- flip to "bfloat16" on real TPU.
+    psum_dtype: str = "float32"
+
+
+# ---------------------------------------------------------------------------
+# sync (standard data+tensor-parallel) training -- the framework baseline
+# ---------------------------------------------------------------------------
+
+def make_sync_train_step(cfg: ArchConfig, *, accum_steps: int = 1,
+                         opt_cfg: OptimizerConfig | None = None):
+    _, opt_update = get_optimizer(cfg.optimizer, opt_cfg)
+
+    def loss_fn(p, mb):
+        return tf.lm_loss(p, cfg, mb)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                    *x.shape[1:]), batch)
+
+            def acc(carry, mb):
+                loss_sum, g_sum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_sum = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_sum, g)
+                return (loss_sum + l, g_sum), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc, (jnp.float32(0.0), g0), mbs)
+            loss = loss / accum_steps
+            grads = jax.tree_util.tree_map(
+                lambda g, p: (g / accum_steps).astype(p.dtype), grads, params)
+        updates, opt_state = opt_update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# LGC training step (Algorithm 1 on the mesh)
+# ---------------------------------------------------------------------------
+
+def _leaf_cum_ks(size: int, sparsity: Sequence[float]) -> jnp.ndarray:
+    ks = [max(1, int(size * f)) for f in sparsity]
+    return jnp.array(jnp.cumsum(jnp.array(ks, jnp.int32)), jnp.int32)
+
+
+def _compress_leaf_dense(e: Array, delta: Array, sparsity) -> tuple[Array, Array]:
+    """Histogram-LGC on one tensor; returns (g, e_new) with leaf's shape."""
+    shape = delta.shape
+    u = (e + delta.astype(jnp.float32)).reshape(-1)
+    cum_ks = _leaf_cum_ks(u.shape[0], sparsity)
+    recv = jnp.ones((len(sparsity),), jnp.int32)
+    g, e_new = kref.hist_lgc_compress(jnp.zeros_like(u), u, cum_ks, recv)
+    return g.reshape(shape), e_new.reshape(shape)
+
+
+def _model_axis_of(spec) -> int | None:
+    """Index of the dimension a PartitionSpec shards over 'model'."""
+    if spec is None:
+        return None
+    for i, ax in enumerate(spec):
+        if ax == "model" or (isinstance(ax, tuple) and "model" in ax):
+            return i
+    return None
+
+
+def _compress_leaf_sparse(e: Array, delta: Array, sparsity, fl_ax: str,
+                          n_fl: int, spec=None) -> tuple[Array, Array]:
+    """Layered sparse exchange: per channel, all_gather fixed-k (val, idx).
+
+    Each LGC layer is an independent collective -- the multi-channel
+    transmission.  Returns (g_mean_global, e_new_local).
+
+    SHARD-ALIGNED selection (perf iterations I-C2/I-C3, EXPERIMENTS.md
+    §Perf): a global top-k over a model-sharded leaf forces GSPMD to
+    all-gather the whole tensor (measured: cross-pod bytes UP 4x -- the
+    original hypothesis refuted), and a naive (rows, cols) reshape is not
+    shard-aligned either (involuntary-full-remat warnings, no improvement).
+    The fix moves the leaf's OWN model-sharded axis to the front, so the
+    (rows, cols) view is a local relabeling; every shard then selects its
+    own k/rows coordinates, the pod-axis all_gather moves only sharded
+    (val, idx) pairs, and the rank bias of shard-local selection is
+    absorbed by the error-feedback memory.
+    """
+    from repro.models.layers import maybe_constrain
+    shape = delta.shape
+    u0 = e + delta.astype(jnp.float32)
+    ax = _model_axis_of(spec) if delta.ndim else None
+    if ax is not None:
+        u = jnp.moveaxis(u0, ax, 0).reshape(shape[ax], -1)
+        u = maybe_constrain(u, "model", None)
+    else:
+        u = u0.reshape(1, -1)
+    rows, cols = u.shape
+
+    # per-row magnitude histogram -> per-row layer thresholds (all local)
+    mx = jax.vmap(kref.hist_maxabs)(u)                     # (rows,)
+    counts = jax.vmap(kref.hist_counts)(u, mx)             # (rows, 256)
+    ks = [max(1, int(cols * f)) for f in sparsity]
+    cum = jnp.cumsum(jnp.array(ks, jnp.int32))
+    thr = jax.vmap(lambda c, m: kref.hist_thresholds(c, m, cum)
+                   )(counts, mx)                           # (rows, C)
+    a = jnp.abs(u)
+    hi = jnp.concatenate([jnp.full((rows, 1), jnp.inf), thr[:, :-1]], 1)
+
+    g_own = jnp.zeros_like(u)
+    g_sum = jnp.zeros_like(u)
+    for c, k_c in enumerate(ks):
+        band = jnp.where((a <= hi[:, c:c + 1]) & (a > thr[:, c:c + 1]), a, 0.0)
+        k_eff = min(k_c + max(1, cols // kref.N_BINS), cols)
+        bvals, idx = jax.lax.top_k(band, k_eff)            # (rows, k_eff)
+        vals = jnp.take_along_axis(u, idx, 1) * (bvals > 0)
+        if ax is not None:
+            vals = maybe_constrain(vals, "model", None)
+            idx = maybe_constrain(idx, "model", None)
+        g_own = jax.vmap(lambda g, i, v: g.at[i].add(v))(g_own, idx, vals)
+        # ---- one collective per LGC layer (the "channel") ----
+        # (I-C5: re-pin the gathered buffers to the model axis -- the
+        # all_gather result otherwise materialises replicated per chip,
+        # which is what kept xpod at the unsharded size in I-C4)
+        vals_all = jax.lax.all_gather(vals, fl_ax)         # (n_fl, rows, k)
+        idx_all = jax.lax.all_gather(idx, fl_ax)
+        if ax is not None:
+            vals_all = maybe_constrain(vals_all, None, "model", None)
+            idx_all = maybe_constrain(idx_all, None, "model", None)
+        for fl in range(n_fl):
+            g_sum = jax.vmap(lambda g, i, v: g.at[i].add(v)
+                             )(g_sum, idx_all[fl], vals_all[fl])
+    e_new = u - g_own
+    g_mean = g_sum / n_fl
+    if ax is not None:
+        back = lambda t: jnp.moveaxis(
+            t.reshape((shape[ax],) + shape[:ax] + shape[ax + 1:]), 0, ax)
+        return back(g_mean), back(e_new)
+    return g_mean.reshape(shape), e_new.reshape(shape)
+
+
+def _compress_leaf_bucket(e: Array, delta: Array, sparsity, fl_ax: str,
+                          n_fl: int, spec=None) -> tuple[Array, Array]:
+    """Bucketed layered selection (perf iteration I-C6, beyond-paper).
+
+    ``lax.top_k`` lowers to a sort, and XLA's sort partitioning replicates a
+    model-sharded operand (measured: the sparse exchange stayed at the
+    unsharded byte count through I-C4/C5).  Bucket-argmax sidesteps sort
+    entirely: split each shard-local row into K strided buckets and keep
+    each bucket's max-|.| element -- a pure reduction that partitions
+    cleanly.  Selection is a randomized top-K approximation (bucket maxima
+    ~ top-K for heavy-tailed gradients); the un-sent mass stays in the
+    error-feedback memory exactly as for exact top-K, so Lemma 1 applies
+    with a (slightly smaller) per-shard gamma.  Channel c owns k_c of the
+    K buckets -- the layers stay disjoint by construction.
+    """
+    from repro.models.layers import maybe_constrain
+    shape = delta.shape
+    u0 = e + delta.astype(jnp.float32)
+    ax = _model_axis_of(spec) if delta.ndim else None
+    if ax is not None:
+        u = jnp.moveaxis(u0, ax, 0).reshape(shape[ax], -1)
+        u = maybe_constrain(u, "model", None)
+    else:
+        u = u0.reshape(1, -1)
+    rows, cols = u.shape
+    ks = [max(1, int(cols * f)) for f in sparsity]
+    k_total = sum(ks)
+    bucket = max(cols // k_total, 1)
+    k_eff = cols // bucket
+    used = k_eff * bucket
+    ub = u[:, :used].reshape(rows, k_eff, bucket)
+    pos_in = jnp.argmax(jnp.abs(ub), -1)                   # (rows, k_eff)
+    vals = jnp.take_along_axis(ub, pos_in[..., None], -1)[..., 0]
+    idx = (jnp.arange(k_eff)[None, :] * bucket + pos_in).astype(jnp.int32)
+    if ax is not None:
+        vals = maybe_constrain(vals, "model", None)
+        idx = maybe_constrain(idx, "model", None)
+
+    g_own = jnp.zeros_like(u)
+    g_own = jax.vmap(lambda g, i, v: g.at[i].add(v))(g_own, idx, vals)
+    # one all_gather per channel-layer: channel c carries buckets
+    # [sum(ks[:c]), sum(ks[:c+1])) -- disjoint layers, separate collectives
+    g_sum = jnp.zeros_like(u)
+    lo = 0
+    for k_c in ks:
+        hi = min(lo + k_c, k_eff)
+        if hi <= lo:
+            break
+        v_all = jax.lax.all_gather(vals[:, lo:hi], fl_ax)  # (n_fl, rows, k_c)
+        i_all = jax.lax.all_gather(idx[:, lo:hi], fl_ax)
+        for fl in range(n_fl):
+            g_sum = jax.vmap(lambda g, i, v: g.at[i].add(v)
+                             )(g_sum, i_all[fl], v_all[fl])
+        lo = hi
+    e_new = u - g_own
+    g_mean = g_sum / n_fl
+    if ax is not None:
+        back = lambda t: jnp.moveaxis(
+            t.reshape((shape[ax],) + shape[:ax] + shape[ax + 1:]), 0, ax)
+        return back(g_mean), back(e_new)
+    return g_mean.reshape(shape), e_new.reshape(shape)
+
+
+def make_lgc_train_step(cfg: ArchConfig, mesh, step_cfg: LGCStepConfig,
+                        batch_spec_tree, param_spec_tree=None):
+    """Algorithm 1: returns f(params, ef, batch) -> (params, ef, metrics).
+
+    Server update is plain subtraction (Alg. 1 line 21); the optimizer lives
+    on the devices as plain SGD (line 6), exactly as in the paper.
+    ``param_spec_tree`` (optional) enables shard-aligned sparse selection
+    in the sparse_gather mode (see _compress_leaf_sparse).
+    """
+    fl_ax = fl_axis_name(mesh)
+    n_fl = dict(zip(mesh.axis_names, mesh.devices.shape))[fl_ax]
+    h = step_cfg.local_steps
+
+    def loss_fn(p, mb):
+        return tf.lm_loss(p, cfg, mb)
+
+    # manual specs: slice only the FL axis; auto axes flow through
+    def manual_batch_spec(spec):
+        # keep the leading-axis entry only if it names the fl axis
+        lead = spec[0] if len(spec) else None
+        has_fl = lead == fl_ax or (isinstance(lead, tuple) and fl_ax in lead)
+        return P(fl_ax) if has_fl else P()
+
+    batch_in_specs = jax.tree_util.tree_map(
+        manual_batch_spec, batch_spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+    def step(params, ef, batch):
+        @functools.partial(
+            jax.shard_map, mesh=mesh,
+            in_specs=(P(), P(), batch_in_specs),
+            out_specs=(P(), P(), P()),
+            axis_names={fl_ax}, check_vma=False)
+        def inner(params, ef, batch):
+            # ---- H local SGD steps (Alg. 1 line 6) -----------------------
+            b_local = jax.tree_util.tree_leaves(batch)[0].shape[0]
+            assert b_local % h == 0 and b_local >= h, (
+                f"per-FL-device batch {b_local} must be divisible by "
+                f"local_steps H={h}")
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape(h, x.shape[0] // h, *x.shape[1:]), batch)
+
+            def local_sgd(carry, mb):
+                p, loss_sum = carry
+                l, g = jax.value_and_grad(loss_fn)(p, mb)
+                p = jax.tree_util.tree_map(
+                    lambda w, gi: (w.astype(jnp.float32)
+                                   - step_cfg.local_lr
+                                   * gi.astype(jnp.float32)).astype(w.dtype),
+                    p, g)
+                return (p, loss_sum + l), None
+
+            (p_end, loss_sum), _ = jax.lax.scan(
+                local_sgd, (params, jnp.float32(0.0)), mbs)
+            loss = jax.lax.pmean(loss_sum / h, fl_ax)
+
+            # ---- net progress + error feedback + LGC (lines 8-11) -------
+            delta = jax.tree_util.tree_map(
+                lambda w0, w1: (w0.astype(jnp.float32)
+                                - w1.astype(jnp.float32)), params, p_end)
+
+            if step_cfg.aggregate == "none":          # FedAvg baseline
+                g_mean = jax.tree_util.tree_map(
+                    lambda dl: jax.lax.pmean(dl, fl_ax), delta)
+                ef_new = ef
+            elif step_cfg.aggregate == "bucket_sparse":
+                if param_spec_tree is not None:
+                    pairs = jax.tree_util.tree_map(
+                        lambda e, dl, sp: _compress_leaf_bucket(
+                            e, dl, step_cfg.sparsity, fl_ax, n_fl, sp),
+                        ef, delta, param_spec_tree)
+                else:
+                    pairs = jax.tree_util.tree_map(
+                        lambda e, dl: _compress_leaf_bucket(
+                            e, dl, step_cfg.sparsity, fl_ax, n_fl),
+                        ef, delta)
+                g_mean = jax.tree_util.tree_map(
+                    lambda t: t[0], pairs,
+                    is_leaf=lambda t: isinstance(t, tuple))
+                ef_new = jax.tree_util.tree_map(
+                    lambda t: t[1], pairs,
+                    is_leaf=lambda t: isinstance(t, tuple))
+            elif step_cfg.aggregate == "sparse_gather":
+                if param_spec_tree is not None:
+                    pairs = jax.tree_util.tree_map(
+                        lambda e, dl, sp: _compress_leaf_sparse(
+                            e, dl, step_cfg.sparsity, fl_ax, n_fl, sp),
+                        ef, delta, param_spec_tree)
+                else:
+                    pairs = jax.tree_util.tree_map(
+                        lambda e, dl: _compress_leaf_sparse(
+                            e, dl, step_cfg.sparsity, fl_ax, n_fl), ef, delta)
+                g_mean = jax.tree_util.tree_map(
+                    lambda t: t[0], pairs,
+                    is_leaf=lambda t: isinstance(t, tuple))
+                ef_new = jax.tree_util.tree_map(
+                    lambda t: t[1], pairs,
+                    is_leaf=lambda t: isinstance(t, tuple))
+            else:                                      # dense_masked
+                pairs = jax.tree_util.tree_map(
+                    lambda e, dl: _compress_leaf_dense(
+                        e, dl, step_cfg.sparsity), ef, delta)
+                g = jax.tree_util.tree_map(
+                    lambda t: t[0], pairs,
+                    is_leaf=lambda t: isinstance(t, tuple))
+                ef_new = jax.tree_util.tree_map(
+                    lambda t: t[1], pairs,
+                    is_leaf=lambda t: isinstance(t, tuple))
+                wire_dt = jnp.dtype(step_cfg.psum_dtype)
+                g_wire = jax.tree_util.tree_map(
+                    lambda gl: gl.astype(wire_dt), g)
+                # quantisation residue joins the error memory (I-C7)
+                ef_new = jax.tree_util.tree_map(
+                    lambda en, gl, gw: en + (gl - gw.astype(jnp.float32)),
+                    ef_new, g, g_wire)
+                g_mean = jax.tree_util.tree_map(
+                    lambda gw: jax.lax.pmean(gw, fl_ax).astype(jnp.float32),
+                    g_wire)
+
+            # ---- server update + broadcast (lines 20-21, 12) -------------
+            params_new = jax.tree_util.tree_map(
+                lambda w, gm: (w.astype(jnp.float32) - gm).astype(w.dtype),
+                params, g_mean)
+            ef_new = jax.tree_util.tree_map(
+                lambda x: x.astype(jnp.dtype(step_cfg.ef_dtype)), ef_new)
+            return params_new, ef_new, loss
+
+        return inner(params, ef, batch)
+
+    return step
+
+
+def init_ef_tree(params, dtype=jnp.float32):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, dtype), params)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ArchConfig, cache_len: int | None = None):
+    def prefill_step(params, batch):
+        return tf.prefill(params, cfg, batch, cache_len)
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, window: int = 0):
+    def serve_step(params, token, cache):
+        logits, cache = tf.decode_step(params, cfg, token, cache,
+                                       window=window)
+        next_token = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        return next_token, cache
+    return serve_step

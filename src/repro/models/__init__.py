@@ -1,0 +1,1 @@
+"""Model zoo: paper models (LR/CNN/RNN) + assigned architecture backbones."""

@@ -1,0 +1,291 @@
+"""Transformer primitives: norms, RoPE, GQA attention (train / prefill /
+decode / sliding-window), MLPs.  Pure functions over param pytrees.
+
+Conventions:
+  * activations  (B, S, D); attention heads  (B, S, H, hd)
+  * params are dicts of jnp arrays; layer-stacked params carry a leading L dim
+  * math in cfg.dtype (bf16), softmax/norm statistics in f32
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def maybe_constrain(x: Array, *spec_axes) -> Array:
+    """with_sharding_constraint iff a mesh with a 'model' axis is live.
+
+    Keeps model code mesh-agnostic: under the production meshes the
+    constraint pins GSPMD's layout choice; in plain CPU tests it is a no-op.
+    """
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and "model" in getattr(am, "axis_names", ()):
+            from jax.sharding import PartitionSpec as P
+            return jax.lax.with_sharding_constraint(x, P(*spec_axes))
+    except Exception:  # noqa: BLE001 -- no mesh context
+        pass
+    return x
+
+
+def mesh_axis_size(name: str) -> int:
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and name in getattr(am, "axis_names", ()):
+            return dict(zip(am.axis_names, am.axis_sizes))[name]
+    except Exception:  # noqa: BLE001
+        pass
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, -1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def layernorm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, -1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return out.astype(x.dtype) * scale + bias
+
+
+def apply_norm(x: Array, p: dict, kind: str) -> Array:
+    if kind == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, jnp.float32) / hd))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, hd); positions: (B, S) or (S,) absolute positions."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: Array        # (B, n_kv, S_cache, hd)
+    v: Array        # (B, n_kv, S_cache, hd)
+    length: Array   # (B,) number of valid positions (ring buffer aware)
+
+
+def _split_heads(x: Array, n: int, hd: int) -> Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd)
+
+
+def qkv_project(x: Array, p: dict, n_heads: int, n_kv: int, hd: int,
+                bias: bool) -> tuple[Array, Array, Array]:
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (_split_heads(q, n_heads, hd), _split_heads(k, n_kv, hd),
+            _split_heads(v, n_kv, hd))
+
+
+def _expand_kv(k: Array, n_heads: int) -> Array:
+    """(B,S,Kv,hd) -> (B,S,H,hd) by repeating each kv head H/Kv times."""
+    b, s, kv, hd = k.shape
+    rep = n_heads // kv
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, rep, hd)
+                            ).reshape(b, s, n_heads, hd)
+
+
+def attention_train(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: int = 0, q_chunk: int = 512,
+                    remat_chunks: bool = True,
+                    seq_shard: bool = True) -> Array:
+    """Query-chunked masked attention.
+
+    q: (B,S,H,hd); k,v: (B,S,H,hd) (kv already expanded to H heads).
+    Chunking the query axis keeps the logits transient at
+    (B, H, q_chunk, S) instead of (B, H, S, S) -- the XLA analogue of flash
+    attention's memory behaviour (DESIGN.md; the Pallas kernel target is
+    repro.kernels.swa_attention for the decode path).
+
+    Perf iterations (EXPERIMENTS.md §Perf):
+      * remat_chunks: rematerialise each chunk in the backward pass instead
+        of stashing the (B,H,qc,Sk) probability tensors per chunk per layer
+        (I-B1: the stacked probs dominated HBM traffic at S=4096).
+      * seq_shard: pin K/V to a sequence-sharded layout over the ``model``
+        axis (context-parallel attention).  Head counts that do not divide
+        the axis (yi-34b: 56 heads / 16) otherwise force GSPMD to replicate
+        whole activations every layer (I-B2).
+    """
+    b, s, h, hd = q.shape
+    s_k = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    qc = min(q_chunk, s)
+    n_chunks = (s + qc - 1) // qc
+    pad = n_chunks * qc - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qh = q.reshape(b, n_chunks, qc, h, hd)
+    kh = jnp.swapaxes(k, 1, 2)      # (B,H,Sk,hd)
+    vh = jnp.swapaxes(v, 1, 2)
+    # I-B3 (EXPERIMENTS.md §Perf): seq-sharding K/V helps exactly when the
+    # head count does NOT divide the model axis (yi-34b 56H, qwen2 12H --
+    # GSPMD would otherwise replicate whole activations); when heads DO
+    # divide (glm4 32H), the default head-sharded layout is already optimal
+    # and forcing seq-shard quadrupled the collective term.
+    if seq_shard and s_k % 128 == 0 and h % max(mesh_axis_size("model"), 1):
+        kh = maybe_constrain(kh, None, None, "model", None)
+        vh = maybe_constrain(vh, None, None, "model", None)
+    kpos = jnp.arange(s_k)
+
+    def one_chunk(ci, qblk):
+        # qblk: (B, qc, H, hd)
+        qb = jnp.swapaxes(qblk, 1, 2)                       # (B,H,qc,hd)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qb, kh).astype(jnp.float32)
+        logits = logits * scale
+        qpos = ci * qc + jnp.arange(qc)
+        mask = jnp.ones((qc, s_k), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        if causal or window:
+            logits = jnp.where(mask[None, None], logits, NEG_INF)
+        p = jax.nn.softmax(logits, -1).astype(vh.dtype)
+        out = jnp.einsum("bhqk,bhkd->bhqd", p, vh)
+        return jnp.swapaxes(out, 1, 2)                      # (B,qc,H,hd)
+
+    body = jax.checkpoint(one_chunk) if remat_chunks else one_chunk
+    if n_chunks == 1:
+        out = body(0, qh[:, 0])
+        return out[:, :s] if pad else out
+    out = jax.lax.map(lambda args: body(*args),
+                      (jnp.arange(n_chunks), jnp.swapaxes(qh, 0, 1)))
+    out = jnp.swapaxes(out, 0, 1).reshape(b, n_chunks * qc, h, hd)
+    return out[:, :s] if pad else out
+
+
+def attention_decode(q: Array, cache: KVCache, n_heads: int) -> Array:
+    """One-token attention over a (possibly ring-buffer) cache.
+
+    q: (B, 1, H, hd); cache.k/v: (B, Kv, S, hd). Returns (B, 1, H, hd).
+    """
+    b, _, h, hd = q.shape
+    kv = cache.k.shape[1]
+    rep = n_heads // kv
+    qg = q[:, 0].reshape(b, kv, rep, hd)                    # (B,Kv,rep,hd)
+    logits = jnp.einsum("bkrd,bksd->bkrs", qg.astype(jnp.float32),
+                        cache.k.astype(jnp.float32))
+    logits = logits / jnp.sqrt(jnp.float32(hd))
+    spos = jnp.arange(cache.k.shape[2])
+    mask = spos[None, :] < cache.length[:, None]            # (B,S)
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, -1).astype(cache.v.dtype)
+    out = jnp.einsum("bkrs,bksd->bkrd", p, cache.v)
+    return out.reshape(b, 1, h, hd)
+
+
+def cache_update(cache: KVCache, k_new: Array, v_new: Array,
+                 pos: Array, window: int = 0) -> KVCache:
+    """Insert one token's K/V at absolute position ``pos`` (B,) int32.
+
+    With ``window`` the cache is a ring buffer of that size (RoPE is applied
+    before insertion, so slot order is irrelevant to attention).
+    """
+    s_cache = cache.k.shape[2]
+    slot = pos % s_cache if window else pos
+    b = k_new.shape[0]
+    bidx = jnp.arange(b)
+    # k_new: (B,1,Kv,hd) -> (B,Kv,hd)
+    k1 = jnp.swapaxes(k_new, 1, 2)[:, :, 0]
+    v1 = jnp.swapaxes(v_new, 1, 2)[:, :, 0]
+    k = cache.k.at[bidx, :, slot].set(k1.astype(cache.k.dtype))
+    v = cache.v.at[bidx, :, slot].set(v1.astype(cache.v.dtype))
+    length = jnp.minimum(pos + 1, s_cache)
+    return KVCache(k, v, length)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_forward(x: Array, p: dict, kind: str) -> Array:
+    if kind == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    if kind == "geglu":
+        return (jax.nn.gelu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    # plain gelu MLP (starcoder2, whisper, grok experts)
+    h = jax.nn.gelu(x @ p["w_up"] + p.get("b_up", 0))
+    return h @ p["w_down"] + p.get("b_down", 0)
+
+
+def mlp_init(key: Array, d: int, dff: int, kind: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d ** -0.5
+    s_ff = dff ** -0.5
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": (jax.random.normal(k1, (d, dff)) * s_in).astype(dtype),
+            "w_up": (jax.random.normal(k2, (d, dff)) * s_in).astype(dtype),
+            "w_down": (jax.random.normal(k3, (dff, d)) * s_ff).astype(dtype),
+        }
+    return {
+        "w_up": (jax.random.normal(k1, (d, dff)) * s_in).astype(dtype),
+        "b_up": jnp.zeros((dff,), dtype),
+        "w_down": (jax.random.normal(k3, (dff, d)) * s_ff).astype(dtype),
+        "b_down": jnp.zeros((d,), dtype),
+    }
+
+
+def attn_init(key: Array, d: int, n_heads: int, n_kv: int, hd: int,
+              bias: bool, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, n_heads * hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, n_kv * hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, n_kv * hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (n_heads * hd, d))
+               * (n_heads * hd) ** -0.5).astype(dtype),
+    }
+    if bias:
+        p |= {"bq": jnp.zeros((n_heads * hd,), dtype),
+              "bk": jnp.zeros((n_kv * hd,), dtype),
+              "bv": jnp.zeros((n_kv * hd,), dtype)}
+    return p
+
+
+def norm_init(d: int, kind: str, dtype) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p

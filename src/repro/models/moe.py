@@ -1,0 +1,131 @@
+"""Top-k Mixture-of-Experts layer (OLMoE 64e/top-8, Grok-1 8e/top-2).
+
+Sort-based dispatch (the TPU-native "megablocks" style -- DESIGN.md §4):
+
+  1. router top-k -> (token, expert, gate) triples, N*K rows
+  2. argsort by expert id; position-in-expert from segment starts
+  3. scatter rows into an (E, C, D) buffer (capacity C, overflow dropped)
+  4. one batched expert matmul (E, C, D) x (E, D, F)  -- MXU friendly
+  5. gather back and combine with gate weights
+
+FLOPs scale with *active* params (E*C ~ N*K*capacity_factor) instead of the
+E-times blowup of the dense-einsum formulation; the buffer is sharded over
+the ``model`` axis (expert parallelism) via a sharding constraint, which is
+what turns step 3/5 into the all-to-all the roofline 'collective' term sees.
+
+``moe_dense_ref`` is the O(N*E) oracle used by unit tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import mlp_forward, mlp_init
+
+Array = jax.Array
+
+
+def moe_init(key: Array, d: int, n_experts: int, d_expert: int, kind: str,
+             dtype) -> dict:
+    kr, ke = jax.random.split(key)
+    expert_keys = jax.random.split(ke, n_experts)
+    experts = jax.vmap(lambda k: mlp_init(k, d, d_expert, kind, dtype)
+                       )(expert_keys)
+    return {
+        "router": (jax.random.normal(kr, (d, n_experts)) * d ** -0.5
+                   ).astype(jnp.float32),
+        "experts": experts,     # each leaf has leading E dim
+    }
+
+
+def _router(x2: Array, w: Array, k: int) -> tuple[Array, Array, Array]:
+    """x2: (N, D) -> gates (N, K), ids (N, K), aux load-balance loss."""
+    logits = (x2.astype(jnp.float32) @ w)                  # (N, E)
+    probs = jax.nn.softmax(logits, -1)
+    gates, ids = jax.lax.top_k(probs, k)
+    gates = gates / jnp.sum(gates, -1, keepdims=True)
+    # Switch-style aux loss: E * sum_e f_e * p_e
+    e = w.shape[1]
+    density = jnp.mean(jax.nn.one_hot(ids, e, dtype=jnp.float32), axis=(0, 1))
+    p_mean = jnp.mean(probs, 0)
+    aux = e * jnp.sum(density * p_mean)
+    return gates, ids, aux
+
+
+def moe_forward(x: Array, p: dict, *, n_experts: int, top_k: int,
+                capacity_factor: float = 1.25,
+                mlp_kind: str = "swiglu",
+                shard_buffer=None) -> tuple[Array, Array]:
+    """x: (B, S, D) -> (out (B,S,D), aux_loss scalar)."""
+    b, s, d = x.shape
+    n = b * s
+    x2 = x.reshape(n, d)
+    gates, ids, aux = _router(x2, p["router"], top_k)
+
+    nk = n * top_k
+    flat_e = ids.reshape(nk)                       # expert of each row
+    flat_tok = jnp.arange(nk) // top_k             # source token of each row
+    flat_gate = gates.reshape(nk)
+
+    order = jnp.argsort(flat_e)                    # stable sort by expert
+    se = flat_e[order]
+    stok = flat_tok[order]
+
+    # position of each row within its expert segment
+    starts = jnp.searchsorted(se, jnp.arange(n_experts))   # (E,)
+    pos = jnp.arange(nk) - starts[se]
+    cap = max(1, int(nk / n_experts * capacity_factor))
+    valid = pos < cap
+    dest = jnp.where(valid, se * cap + pos, n_experts * cap)  # drop slot
+
+    # GATHER-based dispatch (perf iteration I-A, EXPERIMENTS.md §Perf):
+    # scattering token VECTORS into the expert buffer made GSPMD replicate
+    # the token matrix across the expert-parallel axis (collective-bound);
+    # instead scatter only int32 *row indices* (tiny) and move all vector
+    # data with gathers, which partition as passthrough dims.
+    slot_src = jnp.full((n_experts * cap + 1,), n, jnp.int32)
+    slot_src = slot_src.at[dest].set(stok)          # slot -> source token
+    slot_src = slot_src[:-1]
+    x2p = jnp.concatenate([x2, jnp.zeros((1, d), x.dtype)], 0)
+    buf = x2p[slot_src].reshape(n_experts, cap, d)  # gather
+
+    # expert-parallel layout: shard over E when E divides the model axis
+    # (olmoe 64e), else over the hidden dim (grok 8e < 16 shards)
+    from .layers import maybe_constrain, mesh_axis_size
+    e_par = n_experts % max(mesh_axis_size("model"), 1) == 0
+    shard_buffer = shard_buffer or (
+        (lambda t: maybe_constrain(t, "model", None, None)) if e_par
+        else (lambda t: maybe_constrain(t, None, None, "model")))
+    buf = shard_buffer(buf)
+
+    out_buf = jax.vmap(lambda xe, pe: mlp_forward(xe, pe, mlp_kind)
+                       )(buf, p["experts"])        # (E, C, D)
+    out_buf = shard_buffer(out_buf)
+
+    # combine: gather each row's output back, invert the sort permutation,
+    # and reduce the K slots per token with the gate weights -- no scatter.
+    rows = out_buf.reshape(n_experts * cap, d)
+    picked = jnp.where(valid[:, None],
+                       rows[jnp.minimum(dest, n_experts * cap - 1)], 0)
+    inv = jnp.zeros((nk,), jnp.int32).at[order].set(jnp.arange(nk))
+    per_slot = picked[inv].reshape(n, top_k, d)     # token-major
+    # I-A3: pin the combined rows back to the token (data) layout so the
+    # expert->token movement lowers as one all-to-all-ish reshard instead
+    # of replication (EXPERIMENTS.md §Perf)
+    per_slot = maybe_constrain(per_slot, "data", None, None)
+    y = jnp.einsum("nkd,nk->nd", per_slot.astype(jnp.float32), gates)
+    return y.astype(x.dtype).reshape(b, s, d), aux
+
+
+def moe_dense_ref(x: Array, p: dict, *, n_experts: int, top_k: int,
+                  mlp_kind: str = "swiglu") -> tuple[Array, Array]:
+    """O(N*E) oracle: run every expert on every token, weight by gates."""
+    b, s, d = x.shape
+    x2 = x.reshape(-1, d)
+    gates, ids, aux = _router(x2, p["router"], top_k)
+    all_out = jax.vmap(lambda pe: mlp_forward(x2, pe, mlp_kind),
+                       out_axes=1)(p["experts"])   # (N, E, D)
+    w = jnp.zeros((x2.shape[0], n_experts), jnp.float32)
+    w = jax.vmap(lambda wr, i, g: wr.at[i].add(g))(w, ids, gates)
+    y = jnp.einsum("ne,ned->nd", w, all_out.astype(jnp.float32))
+    return y.astype(x.dtype).reshape(b, s, d), aux

@@ -1,0 +1,155 @@
+"""The paper's evaluation models (§4.1): LR, CNN (MNIST) and char-RNN
+(Shakespeare), as pure-pytree JAX models wrapped into ``FLTask``s.
+
+Implemented from scratch (no flax): params are nested dicts of jnp arrays,
+forward passes are plain functions -- the same convention used by the big
+model zoo in :mod:`repro.models.transformer`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fl import FLTask
+from repro.data.mnist import load_synthetic_mnist, partition_iid
+from repro.data.shakespeare import VOCAB_SIZE, char_batches, load_shakespeare
+
+Array = jax.Array
+
+
+def _xent(logits: Array, y: Array) -> Array:
+    logp = jax.nn.log_softmax(logits, -1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[..., None], -1))
+
+
+def _acc(logits: Array, y: Array) -> Array:
+    return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# LR on MNIST (Gortmaker 1994 / standard multinomial logistic regression)
+# ---------------------------------------------------------------------------
+
+def lr_init(key: Array) -> dict:
+    k1, _ = jax.random.split(key)
+    return {"w": jax.random.normal(k1, (784, 10)) * 0.01,
+            "b": jnp.zeros((10,))}
+
+
+def lr_logits(params: dict, x: Array) -> Array:
+    return x.reshape(x.shape[0], -1) @ params["w"] + params["b"]
+
+
+# ---------------------------------------------------------------------------
+# CNN on MNIST (LeNet-style, as in FedML's MNIST CNN)
+# ---------------------------------------------------------------------------
+
+def cnn_init(key: Array) -> dict:
+    ks = jax.random.split(key, 4)
+    he = jax.nn.initializers.he_normal()
+    return {
+        "c1": he(ks[0], (3, 3, 1, 16)), "b1": jnp.zeros((16,)),
+        "c2": he(ks[1], (3, 3, 16, 32)), "b2": jnp.zeros((32,)),
+        "w1": he(ks[2], (7 * 7 * 32, 128)), "bw1": jnp.zeros((128,)),
+        "w2": he(ks[3], (128, 10)), "bw2": jnp.zeros((10,)),
+    }
+
+
+def cnn_logits(params: dict, x: Array) -> Array:
+    def conv(z, w, b):
+        z = jax.lax.conv_general_dilated(z, w, (1, 1), "SAME",
+                                         dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return jax.nn.relu(z + b)
+
+    def pool(z):
+        return jax.lax.reduce_window(z, -jnp.inf, jax.lax.max,
+                                     (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    z = pool(conv(x, params["c1"], params["b1"]))
+    z = pool(conv(z, params["c2"], params["b2"]))
+    z = z.reshape(z.shape[0], -1)
+    z = jax.nn.relu(z @ params["w1"] + params["bw1"])
+    return z @ params["w2"] + params["bw2"]
+
+
+# ---------------------------------------------------------------------------
+# char-RNN on Shakespeare (GRU, as in LEAF/FedML Shakespeare)
+# ---------------------------------------------------------------------------
+
+_RNN_EMB, _RNN_HID = 64, 128
+
+
+def rnn_init(key: Array) -> dict:
+    ks = jax.random.split(key, 5)
+    glorot = jax.nn.initializers.glorot_normal()
+    v, e, h = VOCAB_SIZE, _RNN_EMB, _RNN_HID
+    return {
+        "emb": jax.random.normal(ks[0], (v, e)) * 0.02,
+        "wz": glorot(ks[1], (e + h, h)), "bz": jnp.zeros((h,)),
+        "wr": glorot(ks[2], (e + h, h)), "br": jnp.zeros((h,)),
+        "wh": glorot(ks[3], (e + h, h)), "bh": jnp.zeros((h,)),
+        "out": glorot(ks[4], (h, v)), "bo": jnp.zeros((v,)),
+    }
+
+
+def rnn_logits(params: dict, x: Array) -> Array:
+    """x: (B, S) int32 -> (B, S, V) next-char logits."""
+    emb = params["emb"][x]                       # (B,S,E)
+    b = x.shape[0]
+    h0 = jnp.zeros((b, _RNN_HID))
+
+    def cell(h, et):
+        ze = jnp.concatenate([et, h], -1)
+        z = jax.nn.sigmoid(ze @ params["wz"] + params["bz"])
+        r = jax.nn.sigmoid(ze @ params["wr"] + params["br"])
+        cand = jnp.tanh(jnp.concatenate([et, r * h], -1) @ params["wh"]
+                        + params["bh"])
+        h = (1 - z) * h + z * cand
+        return h, h
+    _, hs = jax.lax.scan(cell, h0, jnp.swapaxes(emb, 0, 1))
+    hs = jnp.swapaxes(hs, 0, 1)                  # (B,S,H)
+    return hs @ params["out"] + params["bo"]
+
+
+# ---------------------------------------------------------------------------
+# FLTask factories
+# ---------------------------------------------------------------------------
+
+def make_mnist_task(model: str = "lr", m_devices: int = 3, n_train: int = 6000,
+                    seed: int = 0) -> FLTask:
+    (xtr, ytr), (xte, yte) = load_synthetic_mnist(n_train=n_train, seed=seed)
+    shards = partition_iid(xtr, ytr, m_devices, seed)
+    init, logits = (lr_init, lr_logits) if model == "lr" else (cnn_init, cnn_logits)
+
+    def loss_fn(params, batch):
+        x, y = batch
+        return _xent(logits(params, x), y)
+
+    def metric_fn(params, batch):
+        x, y = batch
+        return _acc(logits(params, x), y)
+    return FLTask(init, loss_fn, metric_fn, shards, (xte, yte),
+                  name=f"{model}-mnist")
+
+
+def make_shakespeare_task(m_devices: int = 3, seq: int = 48,
+                          seed: int = 0) -> FLTask:
+    stream = load_shakespeare(seed=seed)
+    # per-device contiguous slices (natural non-iid: different plays)
+    parts = np.array_split(stream, m_devices)
+    rng = np.random.default_rng(seed)
+
+    def materialise(part, n=2000):
+        return char_batches(part, n, seq, rng)
+    shards = [materialise(p) for p in parts]
+    xte, yte = char_batches(stream, 1024, seq, rng)
+
+    def loss_fn(params, batch):
+        x, y = batch
+        return _xent(rnn_logits(params, x), y)
+
+    def metric_fn(params, batch):
+        x, y = batch
+        return _acc(rnn_logits(params, x), y)
+    return FLTask(rnn_init, loss_fn, metric_fn, shards, (xte, yte),
+                  name="rnn-shakespeare")

@@ -1,0 +1,181 @@
+"""Mamba2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked-scan formulation: the sequence is split into chunks of length Q;
+within a chunk the output is an attention-like masked matmul (MXU work),
+across chunks a single recurrent state (H, P, N) is propagated with
+``jax.lax.scan`` -- the TPU-native layout of the SSD algorithm (matmuls
+dominate, the scan is O(S/Q) steps).
+
+Shapes: x (B, S, D); heads H = d_inner/head_dim, head dim P, state N.
+``ssd_step`` is the O(1) decode recurrence; test_models.py asserts the
+chunked scan and the step recurrence produce identical outputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rmsnorm
+
+Array = jax.Array
+
+
+def ssm_init(key: Array, cfg, dtype) -> dict:
+    d, di, ns, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    d_in_proj = 2 * di + 2 * ns + nh      # z, x, B, C, dt
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, d_in_proj)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, di + 2 * ns))
+                   * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((di + 2 * ns,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": (jax.random.normal(ks[3], (di, d)) * di ** -0.5
+                     ).astype(dtype),
+    }
+
+
+def _split_in_proj(zxbcdt: Array, cfg):
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * ns]
+    dt = zxbcdt[..., di + di + 2 * ns:]
+    assert dt.shape[-1] == nh
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over time. xbc: (B,S,C); w: (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x: Array, dt: Array, a_log: Array, b_mat: Array, c_mat: Array,
+                chunk: int) -> tuple[Array, Array]:
+    """Core SSD scan.
+
+    x:  (B, S, H, P)   inputs per head
+    dt: (B, S, H)      softplus'd timestep
+    a_log: (H,)        -A = exp(a_log)
+    b_mat, c_mat: (B, S, N)  input/output projections (single group)
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    da = dt * (-jnp.exp(a_log))[None, None, :]            # (B,S,H) log-decay
+    xr = x.reshape(bsz, nc, q, h, p)
+    dtr = dt.reshape(bsz, nc, q, h)
+    dar = da.reshape(bsz, nc, q, h)
+    br = b_mat.reshape(bsz, nc, q, n)
+    cr = c_mat.reshape(bsz, nc, q, n)
+
+    cum = jnp.cumsum(dar, 2)                               # (B,nc,Q,H)
+    seg_total = cum[:, :, -1]                              # (B,nc,H)
+
+    # ----- intra-chunk (attention-like, strictly causal + diagonal) -------
+    # L[i,j] = exp(cum_i - cum_j) for i >= j.  Mask BEFORE the exp: masking
+    # after produces 0*inf = NaN in the backward pass (upper-tri diff > 0).
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    tril = jnp.tril(jnp.ones((q, q), bool))
+    diff = jnp.where(tril[None, None, :, :, None], diff, -1e30)
+    l_mat = jnp.exp(diff)
+    cb = jnp.einsum("bcin,bcjn->bcij", cr, br)             # (B,nc,Q,Q)
+    w_ij = cb[..., None] * l_mat * dtr[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp",
+                         w_ij, xr.astype(jnp.float32))
+
+    # ----- chunk states ----------------------------------------------------
+    decay_to_end = jnp.exp(seg_total[:, :, None, :] - cum)  # (B,nc,Q,H)
+    state_contrib = jnp.einsum(
+        "bcqh,bcqn,bcqhp->bchpn",
+        (dtr * decay_to_end), br, xr.astype(jnp.float32))   # per-chunk state
+
+    def scan_fn(h_prev, inp):
+        contrib, seg = inp                                  # (B,H,P,N),(B,H)
+        h_new = h_prev * jnp.exp(seg)[:, :, None, None] + contrib
+        return h_new, h_prev
+
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.swapaxes(state_contrib, 0, 1), jnp.swapaxes(seg_total, 0, 1)))
+    h_prevs = jnp.swapaxes(h_prevs, 0, 1)                   # (B,nc,H,P,N)
+
+    # ----- inter-chunk contribution ---------------------------------------
+    y_inter = jnp.einsum("bcqn,bchpn->bcqhp", cr, h_prevs) \
+        * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_step(x: Array, dt: Array, a_log: Array, b_vec: Array, c_vec: Array,
+             state: Array) -> tuple[Array, Array]:
+    """Single-token recurrence (decode).
+
+    x: (B,H,P); dt: (B,H); b_vec,c_vec: (B,N); state: (B,H,P,N).
+    h' = exp(dt*A) h + dt * x (outer) B;   y = h' C
+    """
+    da = jnp.exp(dt * (-jnp.exp(a_log))[None, :])          # (B,H)
+    xf = x.astype(jnp.float32)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xf, b_vec)
+    h_new = state * da[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h_new, c_vec)
+    return y.astype(x.dtype), h_new
+
+
+def ssm_block(x: Array, p: dict, cfg) -> tuple[Array, Array]:
+    """Full mamba2 block, training mode. x: (B,S,D) -> (y, final_state)."""
+    di, ns, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = _split_in_proj(zxbcdt, cfg)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :di]
+    b_mat = xbc[..., di:di + ns].astype(jnp.float32)
+    c_mat = xbc[..., di + ns:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    bsz, s, _ = x.shape
+    xh = xs.reshape(bsz, s, nh, hp)
+    y, h_final = ssd_chunked(xh, dt, p["a_log"], b_mat, c_mat, cfg.ssm_chunk)
+    y = y + xh.astype(y.dtype) * p["d_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(bsz, s, di)
+    y = rmsnorm(y, p["norm_scale"]) * jax.nn.silu(z)
+    return y @ p["out_proj"], h_final
+
+
+class SSMCache:
+    """Decode-time cache: conv tail + recurrent state (NamedTuple-free for
+    pytree simplicity -- plain dict used in the model code)."""
+
+
+def ssm_block_step(x: Array, p: dict, cfg, conv_tail: Array, state: Array
+                   ) -> tuple[Array, Array, Array]:
+    """One decode token. x: (B,1,D); conv_tail: (B,K-1,C); state (B,H,P,N)."""
+    di, ns, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = _split_in_proj(zxbcdt, cfg)
+    # causal conv over [tail, current]
+    hist = jnp.concatenate([conv_tail, xbc], 1)            # (B,K,C)
+    kk = p["conv_w"].shape[0]
+    conv_out = sum(hist[:, i] * p["conv_w"][i] for i in range(kk))
+    xbc1 = jax.nn.silu(conv_out + p["conv_b"])             # (B,C)
+    new_tail = hist[:, 1:]
+    xs = xbc1[..., :di]
+    b_vec = xbc1[..., di:di + ns].astype(jnp.float32)
+    c_vec = xbc1[..., di + ns:].astype(jnp.float32)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    xh = xs.reshape(-1, nh, hp)
+    y, state_new = ssd_step(xh, dt1, p["a_log"], b_vec, c_vec, state)
+    y = y + xh.astype(y.dtype) * p["d_skip"][None, :, None].astype(y.dtype)
+    y = y.reshape(x.shape[0], 1, di)
+    y = rmsnorm(y, p["norm_scale"]) * jax.nn.silu(z)
+    return y @ p["out_proj"], new_tail, state_new

@@ -1,0 +1,627 @@
+"""ArchConfig-driven model zoo: init / train forward / prefill / decode for
+all six assigned architecture families (dense, moe, ssm, hybrid, vlm, audio).
+
+Layer stacks are scanned (``jax.lax.scan`` over params stacked on a leading
+L axis) so HLO size and compile time are O(1) in depth -- essential for the
+512-device dry-runs of 60-layer models.  Heterogeneous stacks (zamba2's
+shared attention block, whisper's encoder/decoder) are segmented scans.
+
+Public entry points:
+  init_params(cfg, key)                  -> params pytree
+  lm_loss(params, cfg, batch)            -> scalar loss (train_4k)
+  prefill(params, cfg, batch)            -> (logits_last, cache)
+  decode_step(params, cfg, token, cache) -> (logits, cache)
+  init_cache(cfg, batch_size, cache_len) -> zeroed cache pytree
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import moe as moe_lib
+from . import ssd as ssd_lib
+from .layers import (KVCache, apply_norm, apply_rope, attention_decode,
+                     attention_train, attn_init, cache_update, mlp_forward,
+                     mlp_init, norm_init, qkv_project, _expand_kv)
+
+Array = jax.Array
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+
+def _stacked(key: Array, n: int, fn):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _block_init(cfg: ArchConfig, key: Array, *, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 6)
+    d, dt = cfg.d_model, cfg.dtype
+    p = {
+        "norm1": norm_init(d, cfg.norm, dt),
+        "attn": attn_init(ks[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                          cfg.qkv_bias, dt),
+        "norm2": norm_init(d, cfg.norm, dt),
+    }
+    if cfg.arch_type == "moe":
+        p["moe"] = moe_lib.moe_init(ks[1], d, cfg.n_experts, cfg.d_exp,
+                                    cfg.mlp, dt)
+    else:
+        p["mlp"] = mlp_init(ks[1], d, cfg.d_ff, cfg.mlp, dt)
+    if cross:
+        p["norm_x"] = norm_init(d, cfg.norm, dt)
+        p["cross"] = attn_init(ks[2], d, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                               False, dt)
+    return p
+
+
+def _ssm_block_init(cfg: ArchConfig, key: Array) -> dict:
+    return {
+        "norm1": norm_init(cfg.d_model, cfg.norm, cfg.dtype),
+        "ssm": ssd_lib.ssm_init(key, cfg, cfg.dtype),
+    }
+
+
+def init_params(cfg: ArchConfig, key: Array) -> dict:
+    ks = jax.random.split(key, 8)
+    d, vp, dt = cfg.d_model, cfg.vocab_padded, cfg.dtype
+    params: dict[str, Any] = {
+        "embed": (jax.random.normal(ks[0], (vp, d)) * 0.02).astype(dt),
+        "final_norm": norm_init(d, cfg.norm, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(ks[1], (d, vp)) * d ** -0.5
+                             ).astype(dt)
+
+    if cfg.arch_type in ("dense", "vlm", "moe"):
+        params["blocks"] = _stacked(ks[2], cfg.n_layers,
+                                    lambda k: _block_init(cfg, k))
+    elif cfg.arch_type == "ssm":
+        params["blocks"] = _stacked(ks[2], cfg.n_layers,
+                                    lambda k: _ssm_block_init(cfg, k))
+    elif cfg.arch_type == "hybrid":
+        params["blocks"] = _stacked(ks[2], cfg.n_layers,
+                                    lambda k: _ssm_block_init(cfg, k))
+        params["shared"] = _block_init(cfg, ks[3])        # zamba2 shared block
+    elif cfg.arch_type == "audio":
+        params["enc_blocks"] = _stacked(
+            ks[2], cfg.encoder_layers, lambda k: _block_init(cfg, k))
+        params["blocks"] = _stacked(
+            ks[3], cfg.n_layers, lambda k: _block_init(cfg, k, cross=True))
+        params["enc_norm"] = norm_init(d, cfg.norm, dt)
+        params["enc_pos"] = (jax.random.normal(ks[4], (cfg.encoder_seq, d))
+                             * 0.01).astype(dt)
+        params["dec_pos"] = (jax.random.normal(ks[5], (cfg.max_position, d))
+                             * 0.01).astype(dt)
+    else:
+        raise ValueError(cfg.arch_type)
+
+    if cfg.arch_type == "vlm":
+        # projector from the (stub) vision encoder width to d_model
+        params["vis_proj"] = (jax.random.normal(ks[6], (1024, d))
+                              * 1024 ** -0.5).astype(dt)
+    return params
+
+
+# ===========================================================================
+# train-mode blocks
+# ===========================================================================
+
+def _attn_block_train(x: Array, bp: dict, cfg: ArchConfig, positions: Array,
+                      *, causal: bool = True, window: int = 0,
+                      enc_out: Array | None = None) -> tuple[Array, Array]:
+    """One attention+FFN block, full-sequence. Returns (x, aux_loss)."""
+    h = apply_norm(x, bp["norm1"], cfg.norm)
+    q, k, v = qkv_project(h, bp["attn"], cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                          cfg.qkv_bias)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    k = _expand_kv(k, cfg.n_heads)
+    v = _expand_kv(v, cfg.n_heads)
+    att = attention_train(q, k, v, causal=causal, window=window,
+                          q_chunk=cfg.attn_q_chunk,
+                          remat_chunks=cfg.attn_remat_chunks,
+                          seq_shard=cfg.attn_seq_shard)
+    x = x + att.reshape(*x.shape[:2], -1) @ bp["attn"]["wo"]
+
+    if enc_out is not None:                                # whisper cross-attn
+        h = apply_norm(x, bp["norm_x"], cfg.norm)
+        q, _, _ = qkv_project(h, bp["cross"], cfg.n_heads, cfg.n_kv_heads,
+                              cfg.hd, False)
+        ek = _split_kv_from(enc_out, bp["cross"], cfg)
+        att = attention_train(q, ek[0], ek[1], causal=False,
+                              q_chunk=cfg.attn_q_chunk,
+                              remat_chunks=cfg.attn_remat_chunks,
+                              seq_shard=cfg.attn_seq_shard)
+        x = x + att.reshape(*x.shape[:2], -1) @ bp["cross"]["wo"]
+
+    h = apply_norm(x, bp["norm2"], cfg.norm)
+    aux = jnp.float32(0.0)
+    if cfg.arch_type == "moe":
+        y, aux = moe_lib.moe_forward(
+            h, bp["moe"], n_experts=cfg.n_experts,
+            top_k=cfg.experts_per_tok,
+            capacity_factor=cfg.moe_capacity_factor, mlp_kind=cfg.mlp)
+    else:
+        y = mlp_forward(h, bp["mlp"], cfg.mlp)
+    return x + y, aux
+
+
+def _split_kv_from(enc_out: Array, cross_p: dict, cfg: ArchConfig):
+    k = enc_out @ cross_p["wk"]
+    v = enc_out @ cross_p["wv"]
+    b, s, _ = enc_out.shape
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    return _expand_kv(k, cfg.n_heads), _expand_kv(v, cfg.n_heads)
+
+
+def _ssm_block_train(x: Array, bp: dict, cfg: ArchConfig) -> Array:
+    h = apply_norm(x, bp["norm1"], cfg.norm)
+    y, _ = ssd_lib.ssm_block(h, bp["ssm"], cfg)
+    return x + y
+
+
+# ===========================================================================
+# train forward
+# ===========================================================================
+
+def _scan_blocks(x: Array, stacked: dict, fn, remat: bool):
+    body = jax.checkpoint(fn) if remat else fn
+
+    def step(carry, bp):
+        x, aux = carry
+        x, a = body(x, bp)
+        return (x, aux + a), None
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.float32(0.0)), stacked)
+    return x, aux
+
+
+def forward_hidden(params: dict, cfg: ArchConfig, tokens: Array,
+                   prefix: Array | None = None, *, window: int = 0
+                   ) -> tuple[Array, Array, int]:
+    """Full-sequence forward up to final norm.
+
+    Returns (hidden (B, S_total, D), aux_loss, n_prefix) where the first
+    n_prefix positions are modality-prefix positions (no LM loss).
+    """
+    x = params["embed"][tokens]                            # (B,S,D)
+    n_prefix = 0
+    if cfg.arch_type == "vlm":
+        assert prefix is not None, "vlm needs patch embeddings"
+        vis = prefix.astype(cfg.dtype) @ params["vis_proj"]
+        x = jnp.concatenate([vis, x], 1)
+        n_prefix = vis.shape[1]
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+
+    if cfg.arch_type in ("dense", "vlm", "moe"):
+        fn = lambda x, bp: _attn_block_train(x, bp, cfg, positions,
+                                             window=window)
+        x, aux = _scan_blocks(x, params["blocks"], fn, cfg.remat)
+    elif cfg.arch_type == "ssm":
+        fn = lambda x, bp: (_ssm_block_train(x, bp, cfg), jnp.float32(0.0))
+        x, aux = _scan_blocks(x, params["blocks"], fn, cfg.remat)
+    elif cfg.arch_type == "hybrid":
+        x, aux = _hybrid_train(x, params, cfg, positions, window)
+    elif cfg.arch_type == "audio":
+        assert prefix is not None, "audio needs frame embeddings"
+        enc = prefix.astype(cfg.dtype) + params["enc_pos"][None, :prefix.shape[1]]
+        enc_fn = lambda x, bp: _attn_block_train(x, bp, cfg,
+                                                 jnp.arange(enc.shape[1]),
+                                                 causal=False)
+        enc, _ = _scan_blocks(enc, params["enc_blocks"], enc_fn, cfg.remat)
+        enc = apply_norm(enc, params["enc_norm"], cfg.norm)
+        pos_ids = jnp.minimum(positions, cfg.max_position - 1)
+        x = x + params["dec_pos"][pos_ids][None]
+        dec_fn = lambda x, bp: _attn_block_train(x, bp, cfg, positions,
+                                                 enc_out=enc, window=window)
+        x, aux = _scan_blocks(x, params["blocks"], dec_fn, cfg.remat)
+    else:
+        raise ValueError(cfg.arch_type)
+
+    return apply_norm(x, params["final_norm"], cfg.norm), aux, n_prefix
+
+
+def _hybrid_train(x: Array, params: dict, cfg: ArchConfig, positions: Array,
+                  window: int) -> tuple[Array, Array]:
+    """zamba2: segments of mamba blocks, shared attn block between segments."""
+    period = cfg.attn_every or cfg.n_layers
+    aux = jnp.float32(0.0)
+    fn = lambda x, bp: (_ssm_block_train(x, bp, cfg), jnp.float32(0.0))
+    for seg_start in range(0, cfg.n_layers, period):
+        x, _ = _attn_block_train(x, params["shared"], cfg, positions,
+                                 window=window)
+        seg_end = min(seg_start + period, cfg.n_layers)
+        seg = jax.tree_util.tree_map(lambda a: a[seg_start:seg_end],
+                                     params["blocks"])
+        x, _ = _scan_blocks(x, seg, fn, cfg.remat)
+    return x, aux
+
+
+def logits_fn(params: dict, cfg: ArchConfig, hidden: Array) -> Array:
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (hidden @ head).astype(jnp.float32)
+    from .layers import maybe_constrain
+    return maybe_constrain(logits, *([None] * (logits.ndim - 1)), "model")
+
+
+def lm_loss(params: dict, cfg: ArchConfig, batch: dict) -> Array:
+    """batch: tokens (B,S), labels (B,S), optional prefix (B,P,Dv|D).
+
+    Cross-entropy is computed in sequence chunks (cfg.loss_chunk) with the
+    chunk logits sharded over the model axis (vocab-parallel) and the chunk
+    body rematerialised -- the (B,S,V) logits tensor never exists in HBM.
+    """
+    hidden, aux, n_prefix = forward_hidden(params, cfg, batch["tokens"],
+                                           batch.get("prefix"))
+    hidden = hidden[:, n_prefix:]
+    labels = batch["labels"]
+    b, s, d = hidden.shape
+    chunk = min(cfg.loss_chunk, s)
+
+    def chunk_nll(h_c, y_c):
+        logits = logits_fn(params, cfg, h_c)               # (B,c,V) f32
+        logz = jax.scipy.special.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, y_c[..., None], -1)[..., 0]
+        return jnp.sum(logz - gold)
+
+    if s % chunk != 0 or s == chunk:
+        total = jax.checkpoint(chunk_nll)(hidden, labels) if cfg.remat \
+            else chunk_nll(hidden, labels)
+    else:
+        n_chunks = s // chunk
+        hs = jnp.swapaxes(hidden.reshape(b, n_chunks, chunk, d), 0, 1)
+        ys = jnp.swapaxes(labels.reshape(b, n_chunks, chunk), 0, 1)
+        body = jax.checkpoint(chunk_nll) if cfg.remat else chunk_nll
+
+        def acc(tot, hy):
+            return tot + body(*hy), None
+        total, _ = jax.lax.scan(acc, jnp.float32(0.0), (hs, ys))
+
+    loss = total / (b * s)
+    return loss + cfg.router_aux_weight * aux / max(cfg.n_layers, 1)
+
+
+# ===========================================================================
+# caches
+# ===========================================================================
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int) -> dict:
+    """Zeroed decode cache sized for ``cache_len`` positions."""
+    dt = cfg.dtype
+    cache: dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    l, kv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+
+    def kv_cache(n_l, length):
+        return {"k": jnp.zeros((n_l, batch, kv, length, hd), dt),
+                "v": jnp.zeros((n_l, batch, kv, length, hd), dt)}
+
+    if cfg.arch_type in ("dense", "vlm", "moe"):
+        cache["kv"] = kv_cache(l, cache_len)
+    elif cfg.arch_type == "ssm":
+        cache["ssm"] = _ssm_cache(cfg, l, batch)
+    elif cfg.arch_type == "hybrid":
+        cache["ssm"] = _ssm_cache(cfg, l, batch)
+        n_sites = -(-cfg.n_layers // (cfg.attn_every or cfg.n_layers))
+        cache["kv"] = kv_cache(n_sites, cache_len)
+    elif cfg.arch_type == "audio":
+        cache["kv"] = kv_cache(l, cache_len)
+        cache["cross_k"] = jnp.zeros((l, batch, cfg.n_heads, cfg.encoder_seq,
+                                      hd), dt)
+        cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+    return cache
+
+
+def _ssm_cache(cfg: ArchConfig, l: int, batch: int) -> dict:
+    c = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((l, batch, cfg.ssm_conv - 1, c), cfg.dtype),
+        "state": jnp.zeros((l, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                            cfg.ssm_state), jnp.float32),
+    }
+
+
+# ===========================================================================
+# decode
+# ===========================================================================
+
+def _attn_block_decode(x: Array, bp: dict, cfg: ArchConfig, k_l: Array,
+                       v_l: Array, pos: Array, length: Array, window: int,
+                       cross_kv: tuple[Array, Array] | None = None):
+    """x: (B,1,D). Returns (x, k_l, v_l) with the cache slot updated."""
+    b = x.shape[0]
+    h = apply_norm(x, bp["norm1"], cfg.norm)
+    q, k, v = qkv_project(h, bp["attn"], cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                          cfg.qkv_bias)
+    if cfg.use_rope:
+        pvec = jnp.full((b, 1), pos, jnp.int32)
+        q = apply_rope(q, pvec, cfg.rope_theta)
+        k = apply_rope(k, pvec, cfg.rope_theta)
+    cache = KVCache(k_l, v_l, length)
+    cache = cache_update(cache, k, v, jnp.full((b,), pos, jnp.int32), window)
+    att = attention_decode(q, cache, cfg.n_heads)
+    x = x + att.reshape(b, 1, -1) @ bp["attn"]["wo"]
+
+    if cross_kv is not None:
+        h = apply_norm(x, bp["norm_x"], cfg.norm)
+        q, _, _ = qkv_project(h, bp["cross"], cfg.n_heads, cfg.n_kv_heads,
+                              cfg.hd, False)
+        ck, cv = cross_kv
+        xcache = KVCache(ck, cv, jnp.full((b,), ck.shape[2], jnp.int32))
+        att = attention_decode(q, xcache, cfg.n_heads)
+        x = x + att.reshape(b, 1, -1) @ bp["cross"]["wo"]
+
+    h = apply_norm(x, bp["norm2"], cfg.norm)
+    if cfg.arch_type == "moe":
+        y, _ = moe_lib.moe_forward(
+            h, bp["moe"], n_experts=cfg.n_experts,
+            top_k=cfg.experts_per_tok,
+            capacity_factor=cfg.moe_capacity_factor, mlp_kind=cfg.mlp)
+    else:
+        y = mlp_forward(h, bp["mlp"], cfg.mlp)
+    return x + y, cache.k, cache.v
+
+
+def decode_step(params: dict, cfg: ArchConfig, token: Array, cache: dict,
+                *, window: int = 0) -> tuple[Array, dict]:
+    """One serving step: token (B,1) int32 -> (logits (B,Vp), new cache)."""
+    x = params["embed"][token]                            # (B,1,D)
+    pos = cache["pos"]
+    b = token.shape[0]
+    cache_len = None
+    if "kv" in cache:
+        cache_len = cache["kv"]["k"].shape[3]
+        length = jnp.minimum(jnp.full((b,), pos, jnp.int32), cache_len)
+
+    if cfg.arch_type in ("dense", "vlm", "moe"):
+        def step(x, xs):
+            bp, k_l, v_l = xs
+            x, k_n, v_n = _attn_block_decode(x, bp, cfg, k_l, v_l, pos,
+                                             length, window)
+            return x, (k_n, v_n)
+        x, (k_new, v_new) = jax.lax.scan(
+            step, x, (params["blocks"], cache["kv"]["k"], cache["kv"]["v"]))
+        cache = dict(cache, kv={"k": k_new, "v": v_new})
+
+    elif cfg.arch_type == "ssm":
+        def step(x, xs):
+            bp, conv_l, state_l = xs
+            h = apply_norm(x, bp["norm1"], cfg.norm)
+            y, conv_n, state_n = ssd_lib.ssm_block_step(h, bp["ssm"], cfg,
+                                                        conv_l, state_l)
+            return x + y, (conv_n, state_n)
+        x, (conv_new, state_new) = jax.lax.scan(
+            step, x, (params["blocks"], cache["ssm"]["conv"],
+                      cache["ssm"]["state"]))
+        cache = dict(cache, ssm={"conv": conv_new, "state": state_new})
+
+    elif cfg.arch_type == "hybrid":
+        x, cache = _hybrid_decode(params, cfg, x, cache, pos, window)
+
+    elif cfg.arch_type == "audio":
+        def step(x, xs):
+            bp, k_l, v_l, ck, cv = xs
+            x, k_n, v_n = _attn_block_decode(x, bp, cfg, k_l, v_l, pos,
+                                             length, window,
+                                             cross_kv=(ck, cv))
+            return x, (k_n, v_n)
+        pos_id = jnp.minimum(pos, cfg.max_position - 1)
+        x = x + params["dec_pos"][pos_id][None, None]
+        x, (k_new, v_new) = jax.lax.scan(
+            step, x, (params["blocks"], cache["kv"]["k"], cache["kv"]["v"],
+                      cache["cross_k"], cache["cross_v"]))
+        cache = dict(cache, kv={"k": k_new, "v": v_new})
+    else:
+        raise ValueError(cfg.arch_type)
+
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    logits = logits_fn(params, cfg, x)[:, 0]
+    cache["pos"] = pos + 1
+    return logits, cache
+
+
+def _hybrid_decode(params, cfg, x, cache, pos, window):
+    period = cfg.attn_every or cfg.n_layers
+    b = x.shape[0]
+    cache_len = cache["kv"]["k"].shape[3]
+    length = jnp.minimum(jnp.full((b,), pos, jnp.int32), cache_len)
+    k_all, v_all = cache["kv"]["k"], cache["kv"]["v"]
+    new_k, new_v = [], []
+    conv_all, state_all = cache["ssm"]["conv"], cache["ssm"]["state"]
+    new_conv, new_state = [], []
+
+    def ssm_step(x, xs):
+        bp, conv_l, state_l = xs
+        h = apply_norm(x, bp["norm1"], cfg.norm)
+        y, conv_n, state_n = ssd_lib.ssm_block_step(h, bp["ssm"], cfg,
+                                                    conv_l, state_l)
+        return x + y, (conv_n, state_n)
+
+    for site, seg_start in enumerate(range(0, cfg.n_layers, period)):
+        x, k_n, v_n = _attn_block_decode(x, params["shared"], cfg,
+                                         k_all[site], v_all[site], pos,
+                                         length, window)
+        new_k.append(k_n)
+        new_v.append(v_n)
+        seg_end = min(seg_start + period, cfg.n_layers)
+        sl = slice(seg_start, seg_end)
+        seg = jax.tree_util.tree_map(lambda a: a[sl], params["blocks"])
+        x, (conv_n, state_n) = jax.lax.scan(
+            ssm_step, x, (seg, conv_all[sl], state_all[sl]))
+        new_conv.append(conv_n)
+        new_state.append(state_n)
+
+    cache = dict(cache,
+                 kv={"k": jnp.stack(new_k), "v": jnp.stack(new_v)},
+                 ssm={"conv": jnp.concatenate(new_conv),
+                      "state": jnp.concatenate(new_state)})
+    return x, cache
+
+
+# ===========================================================================
+# prefill
+# ===========================================================================
+
+def prefill(params: dict, cfg: ArchConfig, batch: dict,
+            cache_len: int | None = None) -> tuple[Array, dict]:
+    """Process a full prompt; return (last-position logits, decode cache).
+
+    For attention archs the cache holds the prompt K/V; for SSM/hybrid it
+    holds conv tails + final recurrent states.  Prefill of the *cache* for
+    scanned stacks would need per-layer K/V outputs; we run the block scan
+    with K/V collected as scan outputs.
+    """
+    tokens = batch["tokens"]
+    prefix = batch.get("prefix")
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    n_prefix = 0
+    if cfg.arch_type == "vlm":
+        vis = prefix.astype(cfg.dtype) @ params["vis_proj"]
+        x = jnp.concatenate([vis, x], 1)
+        n_prefix = vis.shape[1]
+    s_tot = x.shape[1]
+    positions = jnp.arange(s_tot)
+
+    if cfg.arch_type in ("dense", "vlm", "moe", "audio"):
+        enc = None
+        if cfg.arch_type == "audio":
+            enc = prefix.astype(cfg.dtype) + params["enc_pos"][None, :prefix.shape[1]]
+            enc_fn = lambda x, bp: _attn_block_train(
+                x, bp, cfg, jnp.arange(enc.shape[1]), causal=False)
+            enc, _ = _scan_blocks(enc, params["enc_blocks"], enc_fn, cfg.remat)
+            enc = apply_norm(enc, params["enc_norm"], cfg.norm)
+            pos_ids = jnp.minimum(positions, cfg.max_position - 1)
+            x = x + params["dec_pos"][pos_ids][None]
+
+        def step(x, bp):
+            h = apply_norm(x, bp["norm1"], cfg.norm)
+            q, k, v = qkv_project(h, bp["attn"], cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.hd, cfg.qkv_bias)
+            if cfg.use_rope:
+                q = apply_rope(q, positions, cfg.rope_theta)
+                k = apply_rope(k, positions, cfg.rope_theta)
+            ke = _expand_kv(k, cfg.n_heads)
+            ve = _expand_kv(v, cfg.n_heads)
+            att = attention_train(q, ke, ve, causal=True,
+                                  q_chunk=cfg.attn_q_chunk,
+                                  remat_chunks=cfg.attn_remat_chunks,
+                                  seq_shard=cfg.attn_seq_shard)
+            x = x + att.reshape(b, s_tot, -1) @ bp["attn"]["wo"]
+            if enc is not None:
+                hx = apply_norm(x, bp["norm_x"], cfg.norm)
+                qx, _, _ = qkv_project(hx, bp["cross"], cfg.n_heads,
+                                       cfg.n_kv_heads, cfg.hd, False)
+                ck, cv = _split_kv_from(enc, bp["cross"], cfg)
+                att = attention_train(qx, ck, cv, causal=False,
+                                      q_chunk=cfg.attn_q_chunk,
+                                      remat_chunks=cfg.attn_remat_chunks,
+                                      seq_shard=cfg.attn_seq_shard)
+                x = x + att.reshape(b, s_tot, -1) @ bp["cross"]["wo"]
+            h = apply_norm(x, bp["norm2"], cfg.norm)
+            if cfg.arch_type == "moe":
+                y, _ = moe_lib.moe_forward(
+                    h, bp["moe"], n_experts=cfg.n_experts,
+                    top_k=cfg.experts_per_tok,
+                    capacity_factor=cfg.moe_capacity_factor, mlp_kind=cfg.mlp)
+            else:
+                y = mlp_forward(h, bp["mlp"], cfg.mlp)
+            kv_out = (jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2))
+            if enc is not None:
+                ck, cv = _split_kv_from(enc, bp["cross"], cfg)
+                kv_out += (jnp.swapaxes(ck, 1, 2), jnp.swapaxes(cv, 1, 2))
+            return x + y, kv_out
+
+        body = jax.checkpoint(step) if cfg.remat else step
+        x, kvs = jax.lax.scan(lambda c, bp: body(c, bp), x, params["blocks"])
+        k_c, v_c = kvs[0], kvs[1]
+        if cache_len is not None and cache_len > s_tot:
+            pad = ((0, 0), (0, 0), (0, 0), (0, cache_len - s_tot), (0, 0))
+            k_c, v_c = jnp.pad(k_c, pad), jnp.pad(v_c, pad)
+        cache = {"pos": jnp.int32(s_tot), "kv": {"k": k_c, "v": v_c}}
+        if cfg.arch_type == "audio":
+            cache["cross_k"], cache["cross_v"] = kvs[2], kvs[3]
+
+    elif cfg.arch_type in ("ssm", "hybrid"):
+        cache = _prefill_ssm(params, cfg, x, positions, cache_len)
+    else:
+        raise ValueError(cfg.arch_type)
+
+    x = apply_norm(x[:, -1:], params["final_norm"], cfg.norm)
+    logits = logits_fn(params, cfg, x)[:, 0]
+    return logits, cache
+
+
+def _prefill_ssm(params, cfg, x, positions, cache_len=None):
+    """SSM/hybrid prefill: collect conv tails + final states per layer."""
+    kconv = cfg.ssm_conv - 1
+
+    def step(x, bp):
+        h = apply_norm(x, bp["norm1"], cfg.norm)
+        zxbcdt = h @ bp["ssm"]["in_proj"]
+        z, xbc, dt = ssd_lib._split_in_proj(zxbcdt, cfg)
+        conv_tail = xbc[:, -kconv:, :]
+        xbc_c = ssd_lib._causal_conv(xbc, bp["ssm"]["conv_w"],
+                                     bp["ssm"]["conv_b"])
+        di, ns = cfg.d_inner, cfg.ssm_state
+        xs_in = xbc_c[..., :di]
+        b_mat = xbc_c[..., di:di + ns].astype(jnp.float32)
+        c_mat = xbc_c[..., di + ns:].astype(jnp.float32)
+        dtp = jax.nn.softplus(dt.astype(jnp.float32) + bp["ssm"]["dt_bias"])
+        bsz, s, _ = x.shape
+        xh = xs_in.reshape(bsz, s, cfg.ssm_heads, cfg.ssm_head_dim)
+        y, h_final = ssd_lib.ssd_chunked(xh, dtp, bp["ssm"]["a_log"], b_mat,
+                                         c_mat, cfg.ssm_chunk)
+        y = y + xh.astype(y.dtype) * bp["ssm"]["d_skip"][None, None, :, None
+                                                         ].astype(y.dtype)
+        y = y.reshape(bsz, s, di)
+        y = ssd_lib.rmsnorm(y, bp["ssm"]["norm_scale"]) * jax.nn.silu(z)
+        return x + y @ bp["ssm"]["out_proj"], (conv_tail, h_final)
+
+    if cfg.arch_type == "ssm":
+        body = jax.checkpoint(step) if cfg.remat else step
+        x, (convs, states) = jax.lax.scan(body, x, params["blocks"])
+        return {"pos": jnp.int32(x.shape[1]),
+                "ssm": {"conv": convs, "state": states}}
+
+    # hybrid: segments with the shared attention block between them
+    period = cfg.attn_every or cfg.n_layers
+    convs, states, ks, vs = [], [], [], []
+    for seg_start in range(0, cfg.n_layers, period):
+        h = apply_norm(x, params["shared"]["norm1"], cfg.norm)
+        q, k, v = qkv_project(h, params["shared"]["attn"], cfg.n_heads,
+                              cfg.n_kv_heads, cfg.hd, cfg.qkv_bias)
+        if cfg.use_rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        att = attention_train(q, _expand_kv(k, cfg.n_heads),
+                              _expand_kv(v, cfg.n_heads), causal=True,
+                              q_chunk=cfg.attn_q_chunk,
+                              remat_chunks=cfg.attn_remat_chunks,
+                              seq_shard=cfg.attn_seq_shard)
+        x = x + att.reshape(*x.shape[:2], -1) @ params["shared"]["attn"]["wo"]
+        h = apply_norm(x, params["shared"]["norm2"], cfg.norm)
+        x = x + mlp_forward(h, params["shared"]["mlp"], cfg.mlp)
+        k_c, v_c = jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2)
+        if cache_len is not None and cache_len > x.shape[1]:
+            pad = ((0, 0), (0, 0), (0, cache_len - x.shape[1]), (0, 0))
+            k_c, v_c = jnp.pad(k_c, pad), jnp.pad(v_c, pad)
+        ks.append(k_c)
+        vs.append(v_c)
+        seg_end = min(seg_start + period, cfg.n_layers)
+        seg = jax.tree_util.tree_map(lambda a: a[seg_start:seg_end],
+                                     params["blocks"])
+        x, (cv, st) = jax.lax.scan(step, x, seg)
+        convs.append(cv)
+        states.append(st)
+    return {"pos": jnp.int32(x.shape[1]),
+            "ssm": {"conv": jnp.concatenate(convs),
+                    "state": jnp.concatenate(states)},
+            "kv": {"k": jnp.stack(ks), "v": jnp.stack(vs)}}

@@ -1,0 +1,8 @@
+"""Pytree optimizers (no optax in the container): SGD, SGD-momentum, AdamW."""
+from .optimizers import (AdamWState, OptState, SGDMState, adamw_init,
+                         apply_updates, get_optimizer, global_norm, sgd_init,
+                         sgdm_init)
+
+__all__ = ["AdamWState", "OptState", "SGDMState", "adamw_init",
+           "apply_updates", "get_optimizer", "global_norm", "sgd_init",
+           "sgdm_init"]

@@ -1,0 +1,153 @@
+"""Pytree optimizers implemented from scratch (container has no optax).
+
+All states are pytrees matching the param tree, so they shard with the same
+partition specs (moments inherit the param's spec in
+repro.launch.sharding_rules).  AdamW keeps f32 moments; SGD-momentum keeps a
+bf16 moment (chosen for the 314B config -- see configs/grok1_314b.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Tree = Any
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    m: Tree
+    v: Tree
+
+
+class SGDMState(NamedTuple):
+    step: Array
+    momentum: Tree
+
+
+class SGDState(NamedTuple):
+    step: Array
+
+
+OptState = AdamWState | SGDMState | SGDState
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    momentum: float = 0.9
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+def adamw_init(params: Tree) -> AdamWState:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(jnp.zeros((), jnp.int32),
+                      jax.tree_util.tree_map(zeros32, params),
+                      jax.tree_util.tree_map(zeros32, params))
+
+
+def sgdm_init(params: Tree) -> SGDMState:
+    return SGDMState(jnp.zeros((), jnp.int32),
+                     jax.tree_util.tree_map(
+                         lambda p: jnp.zeros(p.shape, p.dtype), params))
+
+
+def sgd_init(params: Tree) -> SGDState:
+    return SGDState(jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree: Tree) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def _clip(grads: Tree, max_norm: float) -> Tree:
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (g + 1e-9))
+    return jax.tree_util.tree_map(
+        lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), grads)
+
+
+def _schedule(cfg: OptimizerConfig, step: Array) -> Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    return cfg.lr * warm
+
+
+def adamw_update(cfg: OptimizerConfig, grads: Tree, state: AdamWState,
+                 params: Tree) -> tuple[Tree, AdamWState]:
+    grads = _clip(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = _schedule(cfg, state.step)
+    b1, b2 = cfg.beta1, cfg.beta2
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * gf * gf
+        mh = m2 / (1 - b1 ** step)
+        vh = v2 / (1 - b2 ** step)
+        delta = lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                      + cfg.weight_decay * p.astype(jnp.float32))
+        return (-delta).astype(p.dtype), m2, v2
+
+    flat = jax.tree_util.tree_map(upd, grads, state.m, state.v, params)
+    updates = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                     is_leaf=lambda t: isinstance(t, tuple))
+    m_new = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    v_new = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    return updates, AdamWState(step, m_new, v_new)
+
+
+def sgdm_update(cfg: OptimizerConfig, grads: Tree, state: SGDMState,
+                params: Tree) -> tuple[Tree, SGDMState]:
+    grads = _clip(grads, cfg.grad_clip)
+    lr = _schedule(cfg, state.step)
+
+    def upd(g, mom):
+        m2 = (cfg.momentum * mom.astype(jnp.float32)
+              + g.astype(jnp.float32)).astype(mom.dtype)
+        return (-lr * m2.astype(jnp.float32)).astype(g.dtype), m2
+    flat = jax.tree_util.tree_map(upd, grads, state.momentum)
+    updates = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                     is_leaf=lambda t: isinstance(t, tuple))
+    mom = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+    return updates, SGDMState(state.step + 1, mom)
+
+
+def sgd_update(cfg: OptimizerConfig, grads: Tree, state: SGDState,
+               params: Tree) -> tuple[Tree, SGDState]:
+    lr = _schedule(cfg, state.step)
+    updates = jax.tree_util.tree_map(
+        lambda g: (-lr * g.astype(jnp.float32)).astype(g.dtype), grads)
+    return updates, SGDState(state.step + 1)
+
+
+def apply_updates(params: Tree, updates: Tree) -> Tree:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32)
+                      + u.astype(jnp.float32)).astype(p.dtype),
+        params, updates)
+
+
+def get_optimizer(name: str, cfg: OptimizerConfig | None = None):
+    """Returns (init_fn, update_fn) for 'adamw' | 'sgdm' | 'sgd'."""
+    cfg = cfg or OptimizerConfig(name=name)
+    if name == "adamw":
+        return adamw_init, lambda g, s, p: adamw_update(cfg, g, s, p)
+    if name == "sgdm":
+        return sgdm_init, lambda g, s, p: sgdm_update(cfg, g, s, p)
+    if name == "sgd":
+        return sgd_init, lambda g, s, p: sgd_update(cfg, g, s, p)
+    raise ValueError(name)

@@ -1,0 +1,184 @@
+"""Unit + property tests for the LGC compressor and error feedback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (EFState, LGCCompressor, ef_compress, flatten_tree,
+                        lgc_compress, lgc_layers, top_alpha_beta, top_k,
+                        tree_size, unflatten_like, wire_bytes)
+
+
+def _vec(n, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n,))
+
+
+class TestTopK:
+    def test_keeps_k_largest(self):
+        x = jnp.array([0.1, -5.0, 3.0, 0.01, -2.0])
+        out = top_k(x, 2)
+        np.testing.assert_allclose(out, [0.0, -5.0, 3.0, 0.0, 0.0])
+
+    def test_k_zero_and_full(self):
+        x = _vec(32)
+        assert jnp.all(top_k(x, 0) == 0)
+        np.testing.assert_allclose(top_k(x, 32), x)
+        np.testing.assert_allclose(top_k(x, 100), x)
+
+    def test_nnz_exact(self):
+        x = _vec(257, seed=3)
+        for k in (1, 17, 256):
+            assert int((top_k(x, k) != 0).sum()) == k
+
+
+class TestTopAlphaBeta:
+    def test_band_selection(self):
+        # |x| ranks: 5 > 4 > 3 > 2 > 1
+        x = jnp.array([1.0, -2.0, 3.0, -4.0, 5.0])
+        out = top_alpha_beta(x, 1, 3)  # ranks 1,2 (0-based) -> |4|,|3|
+        np.testing.assert_allclose(out, [0.0, 0.0, 3.0, -4.0, 0.0])
+
+    def test_complement_of_topk(self):
+        x = _vec(100, seed=1)
+        np.testing.assert_allclose(top_alpha_beta(x, 0, 10), top_k(x, 10))
+
+
+class TestLGCLayers:
+    def test_layers_disjoint_and_sum_to_topk(self):
+        x = _vec(500, seed=2)
+        ks = [25, 50, 100]
+        layers = lgc_layers(x, ks)
+        nnz_union = sum((l != 0).astype(jnp.int32) for l in layers)
+        assert int(nnz_union.max()) == 1  # disjoint support
+        np.testing.assert_allclose(sum(layers), top_k(x, sum(ks)), rtol=0, atol=0)
+
+    def test_layer_sizes(self):
+        x = _vec(300, seed=4)
+        ks = [10, 20, 40]
+        for l, k in zip(lgc_layers(x, ks), ks):
+            assert int((l != 0).sum()) == k
+
+    def test_base_layer_has_largest_magnitudes(self):
+        x = _vec(200, seed=5)
+        base, enh = lgc_layers(x, [20, 20])
+        base_min = jnp.abs(base[base != 0]).min()
+        enh_max = jnp.abs(enh[enh != 0]).max()
+        assert float(base_min) >= float(enh_max)
+
+    def test_channel_dropout_partial_sum(self):
+        x = _vec(100, seed=6)
+        ks = [10, 10, 10]
+        got = lgc_compress(x, ks, received=[True, False, True])
+        layers = lgc_layers(x, ks)
+        np.testing.assert_allclose(got, layers[0] + layers[2])
+
+
+class TestErrorFeedback:
+    def test_identity_u_eq_g_plus_e(self):
+        x = _vec(400, seed=7)
+        comp = LGCCompressor([20, 30])
+        g, st = ef_compress(EFState(jnp.zeros(400)), x, comp)
+        np.testing.assert_array_equal(np.asarray(g + st.e), np.asarray(x))
+
+    def test_memory_accumulates_then_drains(self):
+        """A coordinate too small to send eventually leaves via the memory."""
+        comp = LGCCompressor([1])
+        d = 8
+        st = EFState(jnp.zeros(d))
+        delta = jnp.full((d,), 0.1).at[0].set(1.0)
+        sent_mass = jnp.zeros(d)
+        for _ in range(12):
+            g, st = ef_compress(st, delta, comp)
+            sent_mass = sent_mass + g
+        # after enough rounds every coordinate has been transmitted at least once
+        assert int((sent_mass != 0).sum()) > 1
+
+    def test_dropped_layer_mass_retained(self):
+        x = _vec(100, seed=8)
+        comp = LGCCompressor([10, 10])
+        g, st = ef_compress(EFState(jnp.zeros(100)), x, comp,
+                            received=[True, False])
+        # enhancement-layer mass must sit in the error memory
+        layers = comp.layers(x)
+        np.testing.assert_allclose(np.asarray(st.e[layers[1] != 0]),
+                                   np.asarray(x[layers[1] != 0]), rtol=1e-6)
+
+
+class TestPytreeFlatten:
+    def test_roundtrip(self):
+        tree = {"a": jnp.ones((3, 4)), "b": {"c": jnp.arange(5.0)}}
+        flat = flatten_tree(tree)
+        assert flat.shape == (17,)
+        back = unflatten_like(flat, tree)
+        for l1, l2 in zip(jax.tree_util.tree_leaves(tree),
+                          jax.tree_util.tree_leaves(back)):
+            np.testing.assert_allclose(l1, l2)
+
+    def test_tree_size(self):
+        assert tree_size({"a": jnp.ones((3, 4)), "b": jnp.ones(5)}) == 17
+
+
+class TestWireBytes:
+    def test_values_plus_indices(self):
+        assert wire_bytes([10, 20]) == [80, 160]
+        assert wire_bytes([10], value_bytes=2, index_bytes=4) == [60]
+
+
+# ---------------------------------------------------------------------------
+# property-based tests (hypothesis)
+# ---------------------------------------------------------------------------
+
+@st.composite
+def vec_and_ks(draw):
+    n = draw(st.integers(8, 512))
+    seed = draw(st.integers(0, 2 ** 16))
+    c = draw(st.integers(1, 4))
+    ks = [draw(st.integers(0, max(1, n // (c + 1)))) for _ in range(c)]
+    return n, seed, ks
+
+
+@settings(max_examples=40, deadline=None)
+@given(vec_and_ks())
+def test_prop_lgc_equals_topk_union(args):
+    n, seed, ks = args
+    x = _vec(n, seed)
+    np.testing.assert_allclose(np.asarray(lgc_compress(x, ks)),
+                               np.asarray(top_k(x, sum(ks))))
+
+
+@settings(max_examples=40, deadline=None)
+@given(vec_and_ks())
+def test_prop_contraction(args):
+    """Compressor contraction: ||u - C(u)||^2 <= (1 - K/D) ||u||^2."""
+    n, seed, ks = args
+    x = _vec(n, seed)
+    resid = x - lgc_compress(x, ks)
+    k = min(sum(ks), n)
+    lhs = float(jnp.sum(resid ** 2))
+    rhs = (1 - k / n) * float(jnp.sum(x ** 2))
+    assert lhs <= rhs + 1e-5
+
+
+@settings(max_examples=40, deadline=None)
+@given(vec_and_ks())
+def test_prop_error_feedback_conservation(args):
+    n, seed, ks = args
+    x = _vec(n, seed)
+    comp = LGCCompressor(ks)
+    g, st = ef_compress(EFState(jnp.zeros(n)), x, comp)
+    np.testing.assert_allclose(np.asarray(g + st.e), np.asarray(x),
+                               rtol=0, atol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(8, 256), st.integers(0, 100))
+def test_prop_topk_magnitude_dominance(n, seed):
+    """Every kept coordinate is >= every discarded coordinate in |.|."""
+    x = _vec(n, seed)
+    k = max(1, n // 4)
+    out = top_k(x, k)
+    kept = jnp.abs(x)[out != 0]
+    drop = jnp.abs(x)[out == 0]
+    if drop.size and kept.size:
+        assert float(kept.min()) >= float(drop.max()) - 1e-7

@@ -1,0 +1,121 @@
+"""FL simulator (Algorithm 1) behaviour: convergence, baselines, resources,
+async gaps, controller integration, and the Theorem-1 bound sanity checks."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (FLConfig, FixedController, LGCSimulator,
+                        ProblemConstants, corollary1_rate, run_baseline,
+                        theorem1_bound, tree_size)
+from repro.core.controller import DDPGConfig, DDPGController, ReplayBuffer
+from repro.models.paper_models import make_mnist_task, make_shakespeare_task
+
+
+@pytest.fixture(scope="module")
+def lr_task():
+    return make_mnist_task("lr", m_devices=3, n_train=1200)
+
+
+class TestAlgorithm1:
+    def test_lgc_converges(self, lr_task):
+        cfg = FLConfig(rounds=80, eval_every=20)
+        h = run_baseline(lr_task, cfg, "lgc", h=4)
+        assert h.loss[-1] < h.loss[0] - 0.2
+        assert h.accuracy[-1] > 0.4
+
+    def test_lgc_tracks_fedavg_loss(self, lr_task):
+        cfg = FLConfig(rounds=80, eval_every=40)
+        h_lgc = run_baseline(lr_task, cfg, "lgc", h=4)
+        h_avg = run_baseline(lr_task, cfg, "fedavg", h=4)
+        # paper claim: similar convergence despite ~20x less uplink
+        assert h_lgc.loss[-1] < h_avg.loss[-1] + 0.35
+
+    def test_lgc_saves_energy_and_money(self, lr_task):
+        cfg = FLConfig(rounds=60, eval_every=30)
+        h_lgc = run_baseline(lr_task, cfg, "lgc", h=4)
+        h_avg = run_baseline(lr_task, cfg, "fedavg", h=4)
+        assert h_lgc.energy_j[-1] < 0.5 * h_avg.energy_j[-1]
+        assert h_lgc.money[-1] < 0.5 * h_avg.money[-1]
+        assert h_lgc.uplink_mb[-1] < 0.25 * h_avg.uplink_mb[-1]
+
+    def test_topk_single_channel_baseline_runs(self, lr_task):
+        cfg = FLConfig(rounds=30, eval_every=15)
+        h = run_baseline(lr_task, cfg, "topk", h=4)
+        assert h.loss[-1] < h.loss[0]
+
+    def test_async_gaps_respected(self, lr_task):
+        """Devices with different H sync at different times; gap <= max_gap."""
+        cfg = FLConfig(rounds=40, eval_every=20, max_gap=6)
+        ctrls = [FixedController(h, [200, 300, 400]) for h in (2, 3, 6)]
+        sim = LGCSimulator(lr_task, cfg, ctrls, mode="lgc")
+        sim.run()
+        for m, c in enumerate(ctrls):
+            assert sim.decisions[m].h <= cfg.max_gap
+
+    def test_rnn_task_runs(self):
+        task = make_shakespeare_task(m_devices=2, seq=24)
+        cfg = FLConfig(rounds=12, eval_every=6, batch_size=16)
+        h = run_baseline(task, cfg, "lgc", h=3)
+        assert np.isfinite(h.loss[-1])
+
+
+class TestTheoremBounds:
+    CONSTS = ProblemConstants(mu=0.5, l_smooth=4.0, g2=25.0, sigma2=4.0,
+                              b=64, m=3, gamma=0.05, h=4, w0_dist2=10.0)
+
+    def test_bound_positive_and_decreasing_in_t(self):
+        b1 = theorem1_bound(self.CONSTS, 500)
+        b2 = theorem1_bound(self.CONSTS, 5000)
+        assert b1 > b2 > 0
+
+    def test_bound_increases_with_gap(self):
+        import dataclasses
+        loose = dataclasses.replace(self.CONSTS, h=16)
+        assert theorem1_bound(loose, 1000) > theorem1_bound(self.CONSTS, 1000)
+
+    def test_corollary_rate_order(self):
+        r1 = corollary1_rate(self.CONSTS, 1000)
+        r2 = corollary1_rate(self.CONSTS, 10_000)
+        assert r1 > r2 > 0
+        # leading term is O(1/T): a 10x budget cuts the rate by ~10x
+        assert r1 / r2 > 5
+
+
+class TestDDPG:
+    def test_replay_buffer_ring(self):
+        buf = ReplayBuffer(8, 4, 3)
+        for i in range(12):
+            buf.add(np.full(4, i), np.zeros(3), float(i), np.zeros(4))
+        assert buf.n == 8
+        rng = np.random.default_rng(0)
+        s, a, r, s2 = buf.sample(rng, 16)
+        assert s.shape == (16, 4) and r.min() >= 4  # oldest overwritten
+
+    def test_action_ranges(self):
+        c = DDPGController(DDPGConfig(h_max=8, k_total_max=1000, n_channels=3))
+        for _ in range(5):
+            d = c.act(np.array([1.0, 2.0, 3.0, 4.0], np.float32))
+            assert 1 <= d.h <= 8
+            assert len(d.ks) == 3
+            assert all(k >= 1 for k in d.ks)
+            assert sum(d.ks) <= 1100
+
+    def test_learning_updates_weights(self):
+        cfg = DDPGConfig(batch_size=8, buffer_size=64, seed=1)
+        c = DDPGController(cfg)
+        w0 = np.asarray(c.actor[0]["w"]).copy()
+        s = np.ones(4, np.float32) * 2.0   # nonzero state: first-layer grads flow
+        for i in range(20):
+            c.act(s * (i + 1))
+            c.reward(0.1, s * (i + 2))
+        assert len(c.critic_losses) > 0
+        assert not np.allclose(w0, np.asarray(c.actor[0]["w"]))
+
+    def test_reward_sign_follows_loss_drop(self):
+        c = DDPGController(DDPGConfig(seed=2))
+        s = np.ones(4, np.float32)
+        c.act(s)
+        c.reward(0.5, s * 2)
+        c.act(s)
+        c.reward(-0.5, s * 4)
+        assert c.rewards[0] > 0 > c.rewards[1]

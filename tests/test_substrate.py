@@ -1,0 +1,166 @@
+"""Substrate tests: optimizers, data pipelines, checkpointing, channels."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.core.channels import (DEFAULT_CHANNELS, DeviceProfile, comm_cost,
+                                 comp_cost, sample_channels)
+from repro.data import (TokenPipeline, char_batches, load_shakespeare,
+                        load_synthetic_mnist, partition_iid, partition_noniid)
+from repro.optim.optimizers import (OptimizerConfig, adamw_init, adamw_update,
+                                    apply_updates, get_optimizer, global_norm,
+                                    sgdm_init, sgdm_update)
+
+
+class TestOptimizers:
+    def _quadratic(self, name):
+        """Each optimizer must minimise a simple quadratic."""
+        init, update = get_optimizer(
+            name, OptimizerConfig(name=name, lr=0.1, warmup_steps=1,
+                                  weight_decay=0.0))
+        params = {"w": jnp.array([3.0, -2.0])}
+        state = init(params)
+        for _ in range(120):
+            g = jax.tree_util.tree_map(lambda w: 2 * w, params)
+            upd, state = update(g, state, params)
+            params = apply_updates(params, upd)
+        return float(jnp.abs(params["w"]).max())
+
+    @pytest.mark.parametrize("name", ["adamw", "sgdm", "sgd"])
+    def test_minimises_quadratic(self, name):
+        assert self._quadratic(name) < 0.15
+
+    def test_adamw_moments_dtype_and_shapes(self):
+        params = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+        st_ = adamw_init(params)
+        assert st_.m["w"].dtype == jnp.float32
+        g = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+        upd, st2 = adamw_update(OptimizerConfig(), g, st_, params)
+        assert upd["w"].dtype == jnp.bfloat16
+        assert int(st2.step) == 1
+
+    def test_sgdm_moment_inherits_param_dtype(self):
+        params = {"w": jnp.ones((4,), jnp.bfloat16)}
+        st_ = sgdm_init(params)
+        assert st_.momentum["w"].dtype == jnp.bfloat16
+
+    def test_grad_clip(self):
+        cfg = OptimizerConfig(grad_clip=1.0, lr=1.0, warmup_steps=1,
+                              weight_decay=0.0)
+        params = {"w": jnp.zeros((3,))}
+        g = {"w": jnp.array([100.0, 0.0, 0.0])}
+        upd, _ = sgdm_update(cfg, g, sgdm_init(params), params)
+        assert float(global_norm(upd)) <= 1.01
+
+    def test_warmup_schedule(self):
+        cfg = OptimizerConfig(lr=1.0, warmup_steps=10, weight_decay=0.0)
+        params = {"w": jnp.ones(())}
+        state = sgdm_init(params)
+        g = {"w": jnp.ones(())}
+        upd1, state = sgdm_update(cfg, g, state, params)
+        for _ in range(20):
+            _, state = sgdm_update(cfg, g, state, params)
+        upd2, _ = sgdm_update(cfg, g, state, params)
+        assert abs(float(upd1["w"])) < abs(float(upd2["w"]))
+
+
+class TestData:
+    def test_mnist_shapes_and_determinism(self):
+        (x1, y1), (xt, yt) = load_synthetic_mnist(600, 100, seed=7)
+        (x2, y2), _ = load_synthetic_mnist(600, 100, seed=7)
+        assert x1.shape == (600, 28, 28, 1) and xt.shape == (100, 28, 28, 1)
+        np.testing.assert_array_equal(x1, x2)
+        assert x1.min() >= 0 and x1.max() <= 1
+        assert set(np.unique(y1)) <= set(range(10))
+
+    def test_mnist_learnable(self):
+        """Linear probe on raw pixels must beat chance by a wide margin."""
+        (x, y), (xt, yt) = load_synthetic_mnist(2000, 400, seed=0)
+        xf = x.reshape(len(x), -1)
+        xtf = xt.reshape(len(xt), -1)
+        # one ridge-regression step (closed form) on one-hot targets
+        yo = np.eye(10)[y]
+        w = np.linalg.solve(xf.T @ xf + 10 * np.eye(784), xf.T @ yo)
+        acc = (xtf @ w).argmax(-1) == yt
+        assert acc.mean() > 0.5
+
+    def test_partitions(self):
+        (x, y), _ = load_synthetic_mnist(1000, 10)
+        iid = partition_iid(x, y, 4)
+        assert sum(len(s[1]) for s in iid) == 1000
+        non = partition_noniid(x, y, 3, classes_per_device=2)
+        for xs, ys in non:
+            assert len(np.unique(ys)) <= 2
+
+    def test_shakespeare_stream(self):
+        s = load_shakespeare(5000)
+        assert s.shape[0] == 5000
+        rng = np.random.default_rng(0)
+        x, y = char_batches(s, 8, 16, rng)
+        np.testing.assert_array_equal(x[:, 1:], y[:, :-1])
+
+    def test_token_pipeline_structure(self):
+        tp = TokenPipeline(vocab_size=100, seq_len=64, batch_size=4, seed=1)
+        x, y = tp.next_batch()
+        assert x.shape == (4, 64) and x.max() < 100
+        np.testing.assert_array_equal(x[:, 1:], y[:, :-1])
+        # sticky bigram: (prev*7+3)%v transitions appear often
+        hits = np.mean(y == (x.astype(np.int64) * 7 + 3) % 100)
+        assert hits > 0.3
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"a": jnp.ones((3, 2), jnp.bfloat16),
+                "b": {"c": jnp.arange(5), "d": jnp.float32(2.5)}}
+        save_checkpoint(str(tmp_path), 7, tree)
+        assert latest_step(str(tmp_path)) == 7
+        back = load_checkpoint(str(tmp_path), 7, tree)
+        for l1, l2 in zip(jax.tree_util.tree_leaves(tree),
+                          jax.tree_util.tree_leaves(back)):
+            assert l1.dtype == l2.dtype
+            np.testing.assert_array_equal(np.asarray(l1, np.float32),
+                                          np.asarray(l2, np.float32))
+
+    def test_multiple_steps(self, tmp_path):
+        tree = {"w": jnp.zeros(4)}
+        for s in (1, 5, 3):
+            save_checkpoint(str(tmp_path), s, tree)
+        assert latest_step(str(tmp_path)) == 5
+
+
+class TestChannels:
+    def test_table1_energy_means(self):
+        e3, e4, e5 = (c.energy_mean_j_per_mb for c in DEFAULT_CHANNELS)
+        assert e3 == 1296.0
+        assert e4 == pytest.approx(2.2 * 1296)
+        assert e5 == pytest.approx(2.5 * 2.2 * 1296)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2 ** 16))
+    def test_sample_properties(self, seed):
+        s = sample_channels(jax.random.PRNGKey(seed))
+        assert np.all(np.asarray(s.bandwidth_mb_s) > 0)
+        assert np.all(np.asarray(s.energy_j_per_mb) > 1000)
+
+    def test_comm_cost_parallel_time(self):
+        s = sample_channels(jax.random.PRNGKey(0))
+        c = comm_cost(s, [1_000_000, 1_000_000, 1_000_000])
+        per = [comm_cost(s, [1_000_000 if i == j else 0 for i in range(3)])
+               for j in range(3)]
+        # layers travel in parallel: total time = max of singles (if all up)
+        if bool(np.all(np.asarray(s.up))):
+            assert float(c["time_s"]) == pytest.approx(
+                max(float(p["time_s"]) for p in per))
+        assert float(c["energy_j"]) == pytest.approx(
+            sum(float(p["energy_j"]) for p in per), rel=1e-5)
+
+    def test_comp_cost_linear_in_h(self):
+        p = DeviceProfile()
+        assert comp_cost(p, 8)["energy_j"] == pytest.approx(
+            2 * comp_cost(p, 4)["energy_j"])
