@@ -1,0 +1,91 @@
+"""Device-axis scaling of the FL simulator: batched engine vs loop engine.
+
+The paper's system claim is scale across many edge devices; the seed
+simulator's wall clock grew linearly in M because every round dispatched M
+separate jitted SGD steps plus eager per-device compression.  This bench
+sweeps the device count for the batched (vmap + scan, one XLA program per
+sync window) engine against the reference loop engine and reports
+
+    mode, engine, M, wall_s, rounds/s, device-steps/s, final loss
+
+plus the loop/batched speedup at each M where both ran.  ``--out`` (and
+``benchmarks/run.py``) writes the rows as machine-readable BENCH_sim.json
+for CI artifact upload, seeding the perf trajectory.
+
+The loop engine is skipped above ``--loop-max-m`` (default 64): at M=256 it
+needs tens of minutes, which is exactly the point of the batched engine.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core import FLConfig, run_baseline
+from repro.models.paper_models import make_mnist_task
+
+from .common import emit
+
+
+def _one(task, cfg, mode: str, engine: str, m: int) -> dict:
+    t0 = time.time()
+    hist = run_baseline(task, cfg, mode, h=4, engine=engine)
+    wall = time.time() - t0
+    return {
+        "mode": mode, "engine": engine, "m_devices": m,
+        "rounds": cfg.rounds, "wall_s": round(wall, 3),
+        "rounds_per_s": round(cfg.rounds / wall, 3),
+        "device_steps_per_s": round(m * cfg.rounds / wall, 1),
+        "final_loss": round(hist.loss[-1], 4),
+        "uplink_mb": round(hist.uplink_mb[-1], 4),
+    }
+
+
+def run(ms=(8, 64, 256), rounds: int = 100, loop_max_m: int = 64,
+        modes=("lgc",), emit_csv: bool = True) -> dict:
+    rows, speedup = [], {}
+    for m in ms:
+        task = make_mnist_task("lr", m_devices=m,
+                               n_train=max(2000, 32 * m))
+        cfg = FLConfig(rounds=rounds, eval_every=max(rounds // 4, 1))
+        for mode in modes:
+            wall = {}
+            for engine in ("batched",) if m > loop_max_m else ("loop",
+                                                               "batched"):
+                row = _one(task, cfg, mode, engine, m)
+                rows.append(row)
+                wall[engine] = row["wall_s"]
+                if emit_csv:
+                    emit(f"sim_scaling_{mode}_{engine}_m{m}",
+                         row["wall_s"] * 1e6 / rounds,
+                         f"rounds_per_s={row['rounds_per_s']};"
+                         f"device_steps_per_s={row['device_steps_per_s']};"
+                         f"final_loss={row['final_loss']}")
+            if "loop" in wall:
+                speedup[str(m)] = round(wall["loop"] / wall["batched"], 2)
+                if emit_csv:
+                    emit(f"sim_scaling_{mode}_speedup_m{m}", 0.0,
+                         f"speedup={speedup[str(m)]}x")
+    return {"benchmark": "sim_scaling", "task": "lr-mnist",
+            "rounds": rounds, "rows": rows, "speedup_loop_over_batched":
+            speedup}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ms", default="8,64,256")
+    ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--loop-max-m", type=int, default=64)
+    ap.add_argument("--modes", default="lgc")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    res = run(ms=tuple(int(x) for x in args.ms.split(",")),
+              rounds=args.rounds, loop_max_m=args.loop_max_m,
+              modes=tuple(args.modes.split(",")))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

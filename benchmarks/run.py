@@ -1,26 +1,47 @@
 """Benchmark orchestrator: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV lines (harness contract).  Reduced
-budgets so the whole suite finishes in minutes on CPU; each bench_* module
-has a __main__ with --rounds/--out for the full curves used in
-EXPERIMENTS.md.
+Prints ``name,us_per_call,derived`` CSV lines (harness contract) and writes
+the simulator-scaling rows to ``BENCH_sim.json`` (machine-readable, suitable
+for CI artifact upload -- see .github/workflows/ci.yml).
+
+``--smoke`` runs a minutes-scale subset (used by the CI benchmark job);
+the default budgets match the curves in EXPERIMENTS.md.  Each bench_*
+module also has a __main__ with --rounds/--out for full sweeps.
 """
 from __future__ import annotations
 
+import argparse
+import json
+
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced budgets + small device counts (CI)")
+    ap.add_argument("--sim-json", default="BENCH_sim.json",
+                    help="path for the machine-readable scaling rows")
+    args = ap.parse_args()
+
     from benchmarks import (bench_compressor_throughput,
                             bench_convergence_bound, bench_fig3_lr_mnist,
                             bench_fig5_drl, bench_fig6_rnn_shakespeare,
-                            bench_table1_channels)
+                            bench_sim_scaling, bench_table1_channels)
 
     bench_table1_channels.run()                                  # Table 1
     bench_convergence_bound.run()                                # Thm 1
     bench_compressor_throughput.run(sizes=(65_536,))             # kernels
-    bench_fig3_lr_mnist.run(model="lr", rounds=100, n_train=2000)   # Fig 3
-    bench_fig3_lr_mnist.run(model="cnn", rounds=40, n_train=1500)   # Fig 4
-    bench_fig5_drl.run(rounds=120)                               # Fig 5
-    bench_fig6_rnn_shakespeare.run(rounds=30)                    # Fig 6
+    if args.smoke:
+        sim = bench_sim_scaling.run(ms=(8, 16), rounds=24)       # scaling
+        bench_fig3_lr_mnist.run(model="lr", rounds=40, n_train=1200)
+    else:
+        sim = bench_sim_scaling.run(ms=(8, 64, 256), rounds=200)
+        bench_fig3_lr_mnist.run(model="lr", rounds=100, n_train=2000)  # Fig 3
+        bench_fig3_lr_mnist.run(model="cnn", rounds=40, n_train=1500)  # Fig 4
+        bench_fig5_drl.run(rounds=120)                           # Fig 5
+        bench_fig6_rnn_shakespeare.run(rounds=30)                # Fig 6
+
+    with open(args.sim_json, "w") as f:
+        json.dump(sim, f, indent=1)
 
 
 if __name__ == '__main__':

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.data.tokens import TokenPipeline
 from repro.launch import sharding_rules as rules
+from repro.launch import compat
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import (LGCStepConfig, init_ef_tree,
                                 make_lgc_train_step)
@@ -48,7 +49,7 @@ def main():
 
     cfg = hundred_m_config()
     mesh = make_host_mesh(8, model=1)       # 8 FL devices on the data axis
-    jax.set_mesh(mesh)
+    compat.set_mesh(mesh)
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
     n = sum(x.size for x in jax.tree_util.tree_leaves(params))
     print(f"{cfg.name}: {n/1e6:.1f}M params, 8 FL devices, "
@@ -63,7 +64,7 @@ def main():
     pspecs = rules.param_specs(cfg, params, mesh)
     params = rules.place(params, pspecs, mesh)
     step = jax.jit(make_lgc_train_step(cfg, mesh, lgc, bspecs),
-                   in_shardings=(pspecs, pspecs, bspecs),
+                   in_shardings=compat.shardings(mesh, (pspecs, pspecs, bspecs)),
                    donate_argnums=(0, 1))
     ef = rules.place(init_ef_tree(params), pspecs, mesh)
 

@@ -1,5 +1,6 @@
 """LGC core: layered gradient compression, FL loop, channels, control."""
 from .compressor import (LGCCompressor, flatten_tree, lgc_compress, lgc_layers,
+                         lgc_compress_topk, lgc_compress_traced,
                          top_alpha_beta, top_k, tree_size, unflatten_like,
                          wire_bytes)
 from .error_feedback import EFState, ef_compress, init_ef
@@ -11,6 +12,7 @@ from .convergence import ProblemConstants, corollary1_rate, theorem1_bound
 
 __all__ = [
     "LGCCompressor", "flatten_tree", "lgc_compress", "lgc_layers",
+    "lgc_compress_topk", "lgc_compress_traced",
     "top_alpha_beta", "top_k", "tree_size", "unflatten_like", "wire_bytes",
     "EFState", "ef_compress", "init_ef",
     "DEFAULT_CHANNELS", "ChannelSpec", "DeviceProfile", "comm_cost",

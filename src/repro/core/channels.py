@@ -18,7 +18,7 @@ fully reproducible.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -45,29 +45,52 @@ DEFAULT_CHANNELS: tuple[ChannelSpec, ...] = (
 )
 
 
-@dataclasses.dataclass
-class ChannelSample:
-    """Realised channel conditions for one device in one round."""
+class ChannelSample(NamedTuple):
+    """Realised channel conditions for one device in one round.
+
+    A NamedTuple (registered pytree) so it can flow through jit / vmap /
+    scan -- the batched simulator samples all M devices' channels inside
+    one XLA program.
+    """
     energy_j_per_mb: Array      # (N,)
     bandwidth_mb_s: Array       # (N,)
     money_per_mb: Array         # (N,)
     up: Array                   # (N,) bool
 
 
+class ChannelConstants(NamedTuple):
+    """Per-channel spec constants stacked into arrays (for jitted sampling)."""
+    energy_mean: Array          # (N,)
+    energy_std: Array           # (N,)
+    bw_nominal: Array           # (N,)
+    money_per_mb: Array         # (N,)
+    availability: Array         # (N,)
+
+
+def stack_specs(specs: Sequence[ChannelSpec] = DEFAULT_CHANNELS
+                ) -> ChannelConstants:
+    return ChannelConstants(
+        energy_mean=jnp.array([s.energy_mean_j_per_mb for s in specs]),
+        energy_std=jnp.array([s.energy_std for s in specs]),
+        bw_nominal=jnp.array([s.bandwidth_mb_s for s in specs]),
+        money_per_mb=jnp.array([s.money_per_mb for s in specs]),
+        availability=jnp.array([s.availability for s in specs]))
+
+
+def sample_channels_from(key: Array, consts: ChannelConstants) -> ChannelSample:
+    """Core sampling math against pre-stacked constants (jit/vmap friendly)."""
+    n = consts.energy_mean.shape[0]
+    k_e, k_b, k_u = jax.random.split(key, 3)
+    energy = consts.energy_mean + consts.energy_std * jax.random.normal(k_e, (n,))
+    # lognormal jitter, sigma=0.3 -- "highly dynamic edge network"
+    bw = consts.bw_nominal * jnp.exp(0.3 * jax.random.normal(k_b, (n,)))
+    up = jax.random.uniform(k_u, (n,)) < consts.availability
+    return ChannelSample(energy, bw, consts.money_per_mb, up)
+
+
 def sample_channels(key: Array, specs: Sequence[ChannelSpec] = DEFAULT_CHANNELS,
                     ) -> ChannelSample:
-    n = len(specs)
-    k_e, k_b, k_u = jax.random.split(key, 3)
-    means = jnp.array([s.energy_mean_j_per_mb for s in specs])
-    stds = jnp.array([s.energy_std for s in specs])
-    energy = means + stds * jax.random.normal(k_e, (n,))
-    bw_nom = jnp.array([s.bandwidth_mb_s for s in specs])
-    # lognormal jitter, sigma=0.3 -- "highly dynamic edge network"
-    bw = bw_nom * jnp.exp(0.3 * jax.random.normal(k_b, (n,)))
-    money = jnp.array([s.money_per_mb for s in specs])
-    avail = jnp.array([s.availability for s in specs])
-    up = jax.random.uniform(k_u, (n,)) < avail
-    return ChannelSample(energy, bw, money, up)
+    return sample_channels_from(key, stack_specs(specs))
 
 
 def comm_cost(sample: ChannelSample, bytes_per_channel: Sequence[int]
@@ -79,10 +102,15 @@ def comm_cost(sample: ChannelSample, bytes_per_channel: Sequence[int]
     nothing (their layer is lost for this round).
     """
     mb = jnp.array([b / 1e6 for b in bytes_per_channel])
+    return comm_cost_mb(sample, mb)
+
+
+def comm_cost_mb(sample: ChannelSample, mb: Array) -> dict[str, Array]:
+    """:func:`comm_cost` on MB arrays; batches over leading axes under vmap."""
     mb = jnp.where(sample.up, mb, 0.0)
-    energy = jnp.sum(mb * sample.energy_j_per_mb)
-    money = jnp.sum(mb * sample.money_per_mb)
-    time_s = jnp.max(jnp.where(sample.up, mb / sample.bandwidth_mb_s, 0.0))
+    energy = jnp.sum(mb * sample.energy_j_per_mb, -1)
+    money = jnp.sum(mb * sample.money_per_mb, -1)
+    time_s = jnp.max(jnp.where(sample.up, mb / sample.bandwidth_mb_s, 0.0), -1)
     return {"energy_j": energy, "money": money, "time_s": time_s}
 
 

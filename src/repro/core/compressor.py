@@ -123,6 +123,69 @@ def lgc_compress(x: Array, ks: Sequence[int],
     return out
 
 
+def lgc_compress_topk(u: Array, ks: Array, received: Array,
+                      k_cap: int) -> Array:
+    """:func:`lgc_compress_traced` without the full argsort.
+
+    A (M=64, D=7850) argsort costs ~190 ms on XLA:CPU while ``lax.top_k``
+    with k=400 costs ~12 ms, so the batched engine's sync block selects
+    layers by *threshold*: the b-th largest |u| plus an index-order cumsum
+    to split ties, which reproduces the stable-argsort rank semantics
+    exactly on every coordinate that matters (ties among |u| values are
+    broken by ascending index in both formulations; coordinates with
+    u == 0 may differ in mask membership but contribute 0 either way).
+
+    ``k_cap`` is a static bound with k_cap >= min(max(cumsum(ks)), D);
+    callers round it up to a power of two so DDPG budget changes do not
+    recompile.
+    """
+    a = jnp.abs(u)
+    d = u.shape[0]
+    vals = jax.lax.top_k(a, min(k_cap, d))[0]          # descending |u|
+    cum = jnp.cumsum(ks.astype(jnp.int32))
+
+    def rank_below(b):
+        """Boolean mask of {i : rank(|u_i|) < b} (b traced)."""
+        bc = jnp.clip(b, 1, vals.shape[0])
+        thr = vals[bc - 1]                             # b-th largest value
+        gt = a > thr
+        eq = a == thr
+        tied_take = bc - jnp.sum(gt)                   # ties to include
+        pos = jnp.cumsum(eq)                           # 1-based index order
+        sel = gt | (eq & (pos <= tied_take))
+        sel = jnp.where(b > 0, sel, jnp.zeros_like(sel))
+        return jnp.where(b >= d, jnp.ones_like(sel), sel)
+
+    g = jnp.zeros_like(u)
+    prev = jnp.zeros(a.shape, bool)
+    for c in range(ks.shape[0]):       # static unroll over C channels
+        cur = rank_below(cum[c])
+        g = g + jnp.where(cur & ~prev & received[c], u, 0.0)
+        prev = cur
+    return g
+
+
+def lgc_compress_traced(u: Array, ks: Array, received: Array) -> Array:
+    """LGC_k(u) with *traced* layer budgets and delivery mask.
+
+    Same rank semantics as :func:`lgc_compress` but with ``ks`` ((C,) int32)
+    and ``received`` ((C,) bool) as traced values; only the layer *count* C
+    is static.  This is the readable rank-based reference that
+    :func:`lgc_compress_topk` (the argsort-free variant the batched engine
+    actually runs) must match bit-for-bit --
+    tests/test_compressor.py::TestTracedSelection pins all three against
+    each other.
+    """
+    rank = _rank_of(u)
+    cum = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                           jnp.cumsum(ks.astype(jnp.int32))])
+    g = jnp.zeros_like(u)
+    for c in range(ks.shape[0]):       # static unroll over C channels
+        sel = (rank >= cum[c]) & (rank < cum[c + 1])
+        g = g + jnp.where(sel & received[c], u, 0.0)
+    return g
+
+
 # ---------------------------------------------------------------------------
 # sparse wire format -- what actually crosses a channel
 # ---------------------------------------------------------------------------

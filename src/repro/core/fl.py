@@ -11,14 +11,33 @@ Faithful per-iteration simulator:
       else:             w_hat <- w_hat^{t+1/2};  w_m, e_m unchanged
       server:           w_global <- w_global - (1/M) sum_{m synced} g_m
 
-Asynchronous sync sets I_m with gap(I_m) <= H (paper Definition 1) are
+    Asynchronous sync sets I_m with gap(I_m) <= H (paper Definition 1) are
 produced by the per-device controller: after each sync the controller picks
 H_m (next gap, local computation) and D_{m,n} (coordinates per channel).
+
+Two engines implement the same algorithm:
+
+* ``engine="batched"`` (default) -- per-device state is stacked into
+  leading-axis-M pytrees and whole sync windows (local SGD rounds + channel
+  sampling + layered compression + error feedback + the server mean) compile
+  to one XLA program via ``jax.vmap`` + ``jax.lax.scan``
+  (:mod:`repro.core.fl_batched`).  Controller decisions stay host-side at
+  sync boundaries.
+* ``engine="loop"`` -- the reference Python loop over devices (this module).
+
+Both engines draw every random variate from the same counter-based key
+scheme (:func:`stream_key`), so for a fixed seed they simulate the *same*
+trajectory: identical minibatches, channel realisations and eval subsets.
+The engines therefore agree on History up to float reduction order
+(tests/test_fl.py::TestEngineEquivalence).
 
 The simulator accounts energy / money / wall-time per round using the
 multi-channel model in :mod:`repro.core.channels` and supports the paper's
 baselines (FedAvg; LGC with a fixed controller) plus extras (Top-k single
-channel).
+channel, LGC+QSGD int8).  ``backend="pallas"`` routes the flat-vector EF hot
+path through the fused Pallas kernel (:func:`repro.kernels.lgc_compress_hist`,
+histogram-threshold selection); ``backend="exact"`` (default) keeps the
+rank-exact oracle in :mod:`repro.core.compressor` as the reference.
 """
 from __future__ import annotations
 
@@ -36,6 +55,28 @@ from .compressor import (LGCCompressor, flatten_tree, tree_size,
 from .error_feedback import EFState, ef_compress
 
 Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# counter-based randomness, shared by both engines
+# ---------------------------------------------------------------------------
+
+# stream tags: minibatch draws, channel realisations, eval subsets,
+# controller-reward eval subsets, QSGD dither
+TAG_BATCH, TAG_CHANNEL, TAG_EVAL, TAG_REWARD, TAG_QUANT = range(5)
+
+
+def stream_key(base: Array, tag: int, *ids) -> Array:
+    """Derive the PRNG key for one (stream, round, device) event.
+
+    Counter-based (``fold_in`` of static tags + indices) instead of a split
+    chain, so the loop engine (sequential consumption) and the batched engine
+    (vmapped consumption inside a scan) draw bit-identical variates.
+    """
+    k = jax.random.fold_in(base, tag)
+    for i in ids:
+        k = jax.random.fold_in(k, i)
+    return k
 
 
 # ---------------------------------------------------------------------------
@@ -66,6 +107,8 @@ class FLConfig:
     eval_every: int = 10
     value_bytes: int = 4               # fp32 values on the wire
     index_bytes: int = 4
+    engine: str = "batched"            # "batched" | "loop"
+    backend: str = "exact"             # "exact" | "pallas"
 
 
 @dataclasses.dataclass
@@ -113,10 +156,16 @@ class LGCSimulator:
     """Runs Algorithm 1 for M devices with per-device controllers."""
 
     def __init__(self, task: FLTask, cfg: FLConfig,
-                 controllers: Sequence, mode: str = "lgc"):
+                 controllers: Sequence, mode: str = "lgc",
+                 engine: str | None = None, backend: str | None = None):
         """mode: 'lgc' (layered, multi-channel), 'topk' (single channel),
-        'fedavg' (dense upload, fastest channel, no compression)."""
+        'fedavg' (dense upload, fastest channel, no compression),
+        'lgc_q8' (LGC + QSGD int8 values)."""
         self.task, self.cfg, self.mode = task, cfg, mode
+        self.engine = engine or cfg.engine
+        self.backend = backend or cfg.backend
+        assert self.engine in ("batched", "loop"), self.engine
+        assert self.backend in ("exact", "pallas"), self.backend
         self.controllers = list(controllers)
         self.m_devices = len(task.device_data)
         assert len(self.controllers) == self.m_devices
@@ -139,8 +188,7 @@ class LGCSimulator:
 
         self._sgd_step = jax.jit(self._make_sgd_step())
         self._eval = jax.jit(self._make_eval())
-        self._rng = np.random.default_rng(cfg.seed)
-        self._key = jax.random.PRNGKey(cfg.seed + 1)
+        self._base = jax.random.PRNGKey(cfg.seed + 1)   # event-key base
 
     # -- jitted pieces ------------------------------------------------------
     def _make_sgd_step(self):
@@ -161,10 +209,23 @@ class LGCSimulator:
         a = self.cfg.lr_decay_a
         return self.cfg.lr * a / (a + t)
 
-    def _sample_batch(self, m: int):
+    def _sample_batch(self, m: int, t: int):
         x, y = self.task.device_data[m]
-        idx = self._rng.integers(0, x.shape[0], self.cfg.batch_size)
+        key = stream_key(self._base, TAG_BATCH, t, m)
+        idx = np.asarray(jax.random.randint(key, (self.cfg.batch_size,),
+                                            0, x.shape[0]))
         return jnp.asarray(x[idx]), jnp.asarray(y[idx])
+
+    def _eval_subset(self, tag: int, ids: tuple, n_take: int
+                     ) -> tuple[float, float]:
+        """(loss, accuracy) of the global model on a keyed eval subset."""
+        xb, yb = self.task.eval_data
+        n = xb.shape[0]
+        key = stream_key(self._base, tag, *ids)
+        idx = np.asarray(jax.random.randint(key, (min(n_take, n),), 0, n))
+        loss, acc = self._eval(self.params, (jnp.asarray(xb[idx]),
+                                             jnp.asarray(yb[idx])))
+        return float(loss), float(acc)
 
     def _controller_state(self, m: int) -> np.ndarray:
         s = self.spend[m]
@@ -174,11 +235,21 @@ class LGCSimulator:
     def _decide(self, m: int, t: int):
         dec = self.controllers[m].act(self._controller_state(m))
         h = int(np.clip(dec.h, 1, self.cfg.max_gap))
-        self.decisions[m] = RoundDecision(h, dec.ks)
+        # one layer per channel: pad/trim the controller's budgets so both
+        # engines see the same (and the cost model's shapes line up)
+        n_ch = len(self.cfg.channels)
+        ks = (list(dec.ks) + [0] * n_ch)[:n_ch]
+        self.decisions[m] = RoundDecision(h, ks)
         self.next_sync[m] = t + h
 
     # -- main loop ----------------------------------------------------------
     def run(self) -> History:
+        if self.engine == "batched":
+            from .fl_batched import BatchedEngine
+            return BatchedEngine(self).run()
+        return self._run_loop()
+
+    def _run_loop(self) -> History:
         hist = History()
         cfg = self.cfg
         for m in range(self.m_devices):
@@ -187,7 +258,7 @@ class LGCSimulator:
             eta = self._eta(t)
             updates, costs = [], []
             for m in range(self.m_devices):
-                batch = self._sample_batch(m)
+                batch = self._sample_batch(m, t)
                 self.w_hat[m] = self._sgd_step(self.w_hat[m], batch,
                                                jnp.float32(eta))
                 if t + 1 >= self.next_sync[m]:
@@ -207,9 +278,23 @@ class LGCSimulator:
                 self._record(hist, t)
         return hist
 
+    def _ef_step(self, m: int, t: int, delta: Array, ks: Sequence[int],
+                 received: Sequence[bool]) -> Array:
+        """One error-compensated layered compression (backend-dispatched)."""
+        if self.backend == "pallas":
+            from repro.kernels import lgc_compress_hist
+            cum_ks = jnp.cumsum(jnp.asarray(ks, jnp.int32))
+            recv = jnp.asarray(received, jnp.int32)
+            g, e_new = lgc_compress_hist(self.ef[m].e, delta, cum_ks, recv)
+            self.ef[m] = EFState(e_new)
+            return g
+        comp = LGCCompressor(ks)
+        g, self.ef[m] = ef_compress(self.ef[m], delta, comp, received)
+        return g
+
     def _sync_device(self, m: int, t: int):
         dec = self.decisions[m]
-        self._key, k_ch = jax.random.split(self._key)
+        k_ch = stream_key(self._base, TAG_CHANNEL, t, m)
         ch = sample_channels(k_ch, self.cfg.channels)
         delta = self.w_anchor[m] - flatten_tree(self.w_hat[m])  # w_m - w_hat^{t+1/2}
 
@@ -217,12 +302,11 @@ class LGCSimulator:
             # LGC + QSGD int8 values on the wire (composes under EF):
             # wire = k * (1 value byte + 4 index bytes) per channel
             ks = list(dec.ks)
-            comp = LGCCompressor(ks)
             received = [bool(u) for u in np.asarray(ch.up)][:len(ks)]
             received += [True] * (len(ks) - len(received))
-            g, self.ef[m] = ef_compress(self.ef[m], delta, comp, received)
+            g = self._ef_step(m, t, delta, ks, received)
             from .compressor import qsgd_dequantize, qsgd_quantize
-            self._key, kq = jax.random.split(self._key)
+            kq = stream_key(self._base, TAG_QUANT, t, m)
             q, scale = qsgd_quantize(g, kq)
             g_deq = qsgd_dequantize(q, scale)
             # quantization residual stays in the error memory
@@ -244,10 +328,9 @@ class LGCSimulator:
                 ks = [sum(dec.ks)] + [0] * (len(dec.ks) - 1)
             else:
                 ks = list(dec.ks)
-            comp = LGCCompressor(ks)
             received = [bool(u) for u in np.asarray(ch.up)][:len(ks)]
             received += [True] * (len(ks) - len(received))
-            g, self.ef[m] = ef_compress(self.ef[m], delta, comp, received)
+            g = self._ef_step(m, t, delta, ks, received)
             nbytes = wire_bytes(ks, self.cfg.value_bytes, self.cfg.index_bytes)
             nbytes = [b if r else 0 for b, r in zip(nbytes, received)]
             cost = comm_cost(ch, nbytes)
@@ -265,25 +348,20 @@ class LGCSimulator:
 
     def _reward_and_decide(self, m: int, t: int):
         """Reward Eq. (14)-(16): utility = (loss drop) / (resource spend)."""
-        xb, yb = self.task.eval_data
-        idx = self._rng.integers(0, xb.shape[0], min(512, xb.shape[0]))
-        loss, _ = self._eval(self.params, (jnp.asarray(xb[idx]),
-                                           jnp.asarray(yb[idx])))
-        loss = float(loss)
         ctrl = self.controllers[m]
-        if self.prev_loss[m] is not None and hasattr(ctrl, "reward"):
-            ctrl.reward(self.prev_loss[m] - loss, self._controller_state(m))
-        self.prev_loss[m] = loss
+        if hasattr(ctrl, "reward"):
+            loss, _ = self._eval_subset(TAG_REWARD, (t, m), 512)
+            if self.prev_loss[m] is not None:
+                ctrl.reward(self.prev_loss[m] - loss,
+                            self._controller_state(m))
+            self.prev_loss[m] = loss
         self._decide(m, t + 1)
 
     def _record(self, hist: History, t: int):
-        xb, yb = self.task.eval_data
-        idx = self._rng.integers(0, xb.shape[0], min(2048, xb.shape[0]))
-        loss, acc = self._eval(self.params, (jnp.asarray(xb[idx]),
-                                             jnp.asarray(yb[idx])))
+        loss, acc = self._eval_subset(TAG_EVAL, (t,), 2048)
         hist.step.append(t)
-        hist.loss.append(float(loss))
-        hist.accuracy.append(float(acc))
+        hist.loss.append(loss)
+        hist.accuracy.append(acc)
         hist.energy_j.append(sum(s["energy_j"] for s in self.spend))
         hist.money.append(sum(s["money"] for s in self.spend))
         hist.time_s.append(max(s["time_s"] for s in self.spend))
@@ -291,7 +369,9 @@ class LGCSimulator:
 
 
 def run_baseline(task: FLTask, cfg: FLConfig, mode: str,
-                 h: int = 4, ks: Sequence[int] | None = None) -> History:
+                 h: int = 4, ks: Sequence[int] | None = None,
+                 engine: str | None = None, backend: str | None = None
+                 ) -> History:
     """Convenience: FedAvg / LGC-noDRL / Top-k with fixed controllers."""
     m = len(task.device_data)
     if ks is None:
@@ -299,4 +379,5 @@ def run_baseline(task: FLTask, cfg: FLConfig, mode: str,
         k_total = max(1, d // 20)                      # 5% sparsity default
         ks = [k_total // 2, k_total // 4, k_total - k_total // 2 - k_total // 4]
     ctrls = [FixedController(h, ks) for _ in range(m)]
-    return LGCSimulator(task, cfg, ctrls, mode=mode).run()
+    return LGCSimulator(task, cfg, ctrls, mode=mode,
+                        engine=engine, backend=backend).run()

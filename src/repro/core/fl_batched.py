@@ -1,0 +1,268 @@
+"""Batched, device-axis-vectorized, fully-jitted LGC engine.
+
+The reference engine in :mod:`repro.core.fl` walks a Python loop over
+devices -- M jit dispatches per round plus eager compression per sync, so
+simulated device count is the wall-clock bottleneck.  This engine stacks all
+per-device state into leading-axis-M pytrees and compiles an entire sync
+window into ONE XLA program:
+
+    window(t0 .. te):                        # te = earliest sync / eval point
+      jax.lax.scan over rounds:
+        jax.vmap over devices: minibatch draw + local SGD step
+      at te-1 (same program):
+        jax.vmap over devices: channel sampling, layered compression
+        (rank-exact or Pallas histogram backend), error feedback, QSGD,
+        byte / energy / money / time accounting
+        server mean of the synced devices' updates
+
+Controller decisions (DDPG act / reward) stay host-side at sync boundaries:
+the host loop chains windows, feeding per-device (H_m, k_m) decision arrays
+back in as *traced* values, so heterogeneous DDPG allocations never trigger
+recompiles (only a new window length L does, and L takes few distinct
+values).
+
+Randomness uses the counter-based :func:`repro.core.fl.stream_key` scheme,
+shared with the loop engine, so both engines simulate bit-identical
+minibatches / channels / eval subsets and their History agrees to float
+reduction order (verified in tests/test_fl.py::TestEngineEquivalence).
+
+``backend="pallas"`` routes the per-device EF hot path through the fused
+Pallas kernel pipeline (:func:`repro.kernels.lgc_compress_hist`: maxabs +
+256-bin histogram thresholds + fused sparsify/EF), vmapped across the device
+axis; ``backend="exact"`` uses the rank oracle
+(:func:`repro.core.compressor.lgc_compress_traced`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .channels import comm_cost_mb, comp_cost, sample_channels_from, stack_specs
+from .compressor import (flatten_tree, lgc_compress_topk, qsgd_dequantize,
+                         qsgd_quantize, unflatten_like)
+from .fl import (TAG_BATCH, TAG_CHANNEL, TAG_QUANT, History, stream_key)
+
+Array = jax.Array
+
+
+def _stack_device_data(device_data):
+    """Pad per-device shards to a common length and stack: (M, Nmax, ...)."""
+    ns = [int(x.shape[0]) for x, _ in device_data]
+    nmax = max(ns)
+    x0, y0 = device_data[0]
+    xs = np.zeros((len(ns), nmax) + x0.shape[1:], x0.dtype)
+    ys = np.zeros((len(ns), nmax) + y0.shape[1:], y0.dtype)
+    for i, (x, y) in enumerate(device_data):
+        xs[i, : x.shape[0]] = x
+        ys[i, : y.shape[0]] = y
+    return jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(ns, jnp.int32)
+
+
+class BatchedEngine:
+    """Drives one :class:`~repro.core.fl.LGCSimulator` with stacked state.
+
+    Host-visible simulator attributes (params, spend, decisions, next_sync,
+    prev_loss) are kept in sync at window boundaries so controllers, reward
+    evaluation and History recording reuse the simulator's own host-side
+    code paths unchanged.
+    """
+
+    def __init__(self, sim):
+        self.sim = sim
+        cfg = sim.cfg
+        self.m = sim.m_devices
+        self.d = sim.d
+        self.n_ch = len(cfg.channels)
+        self.data_x, self.data_y, self.n_dev = _stack_device_data(
+            sim.task.device_data)
+        # stacked per-device state (Algorithm 1 line 1)
+        self.w_hat = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (self.m,) + a.shape) + 0,
+            sim.params)
+        flat0 = flatten_tree(sim.params)
+        self.anchor = jnp.broadcast_to(flat0[None], (self.m, self.d)) + 0
+        self.ef = jnp.zeros((self.m, self.d), jnp.float32)
+        self._window = jax.jit(self._make_window(),
+                               static_argnames=("k_cap",))
+
+    # -- the one-XLA-program sync window ------------------------------------
+    def _make_window(self):
+        sim, cfg = self.sim, self.sim.cfg
+        loss_fn = sim.task.loss_fn
+        base = sim._base
+        m, d, n_ch = self.m, self.d, self.n_ch
+        mode, backend = sim.mode, sim.backend
+        bsz = cfg.batch_size
+        vb, ib = cfg.value_bytes, cfg.index_bytes
+        consts = stack_specs(cfg.channels)
+        marange = jnp.arange(m)
+
+        def local_round(w_hat, t, eta, valid, data_x, data_y, n_dev):
+            keys = jax.vmap(lambda i: stream_key(base, TAG_BATCH, t, i))(
+                marange)
+
+            def dev(w, key, n, x, y):
+                idx = jax.random.randint(key, (bsz,), 0, n)
+                grads = jax.grad(loss_fn)(w, (x[idx], y[idx]))
+                # padded scan steps (valid=False) leave w bitwise untouched
+                return jax.tree_util.tree_map(
+                    lambda p, gi: jnp.where(valid, p - eta * gi, p), w, grads)
+            return jax.vmap(dev)(w_hat, keys, n_dev, data_x, data_y)
+
+        def compress(ef, delta, ks_mat, recv, k_cap):
+            """(g, ef_new) for all devices; layered EF, backend-dispatched."""
+            if backend == "pallas":
+                from repro.kernels import lgc_compress_hist
+                cum = jnp.cumsum(ks_mat, axis=1)
+                return jax.vmap(
+                    lambda e, dl, ck, rc: lgc_compress_hist(
+                        e, dl, ck, rc.astype(jnp.int32)))(
+                    ef, delta, cum, recv)
+            u = ef + delta
+            g = jax.vmap(
+                lambda ui, ki, ri: lgc_compress_topk(ui, ki, ri, k_cap))(
+                u, ks_mat, recv)
+            return g, u - g
+
+        def window(params, w_hat, anchor, ef, data_x, data_y, n_dev,
+                   ts, etas, valid, sync_mask, ks_mat, *, k_cap):
+            """ts/etas/valid: (L,) round indices, step sizes, padding mask
+            (L is padded to a power of two so few scan programs compile);
+            ks_mat: (M, C).  A window with an all-false sync_mask degrades
+            to a bitwise no-op on params/anchor/ef with zero costs, so one
+            program serves sync and record-only windows alike."""
+            def body(w, sc):
+                t, eta, v = sc
+                return local_round(w, t, eta, v, data_x, data_y, n_dev), None
+            w_hat, _ = jax.lax.scan(body, w_hat, (ts, etas, valid))
+
+            t_sync = ts[-1]
+            ch_keys = jax.vmap(
+                lambda i: stream_key(base, TAG_CHANNEL, t_sync, i))(marange)
+            ch = jax.vmap(lambda k: sample_channels_from(k, consts))(ch_keys)
+            delta = anchor - jax.vmap(flatten_tree)(w_hat)   # (M, D)
+
+            if mode == "fedavg":
+                g, ef_new = delta, ef                 # dense, no error feedback
+                bw = ch.bandwidth_mb_s * ch.up
+                best = jnp.argmax(bw, axis=1)
+                nbytes = (jax.nn.one_hot(best, n_ch, dtype=jnp.float32)
+                          * (d * vb))
+            else:
+                recv = ch.up[:, :n_ch]
+                g, ef_new = compress(ef, delta, ks_mat, recv, k_cap)
+                if mode == "lgc_q8":
+                    kq = jax.vmap(lambda i: stream_key(
+                        base, TAG_QUANT, t_sync, i))(marange)
+                    q, scale = jax.vmap(qsgd_quantize)(g, kq)
+                    g_deq = jax.vmap(qsgd_dequantize)(q, scale)
+                    # quantization residual stays in the error memory
+                    ef_new = ef_new + (g - g_deq)
+                    g = g_deq
+                vbytes = 1 if mode == "lgc_q8" else vb
+                nbytes = (ks_mat.astype(jnp.float32) * (vbytes + ib)
+                          * recv.astype(jnp.float32))
+
+            comm = comm_cost_mb(ch, nbytes / 1e6)            # dict of (M,)
+            # byte counts are integer-valued (exact in f32 below 2^24), so the
+            # host-side f64 accumulation matches the loop engine bitwise
+            costs = jnp.stack([comm["energy_j"], comm["money"],
+                               comm["time_s"], jnp.sum(nbytes, axis=1)], 1)
+            costs = jnp.where(sync_mask[:, None], costs, 0.0)
+
+            g_sum = jnp.sum(jnp.where(sync_mask[:, None], g, 0.0), axis=0)
+            new_flat = flatten_tree(params) - g_sum / m
+            new_params = unflatten_like(new_flat, params)
+            # broadcast: synced devices adopt the global model
+            w_hat = jax.tree_util.tree_map(
+                lambda wl, pl: jnp.where(
+                    sync_mask.reshape((m,) + (1,) * pl.ndim), pl[None], wl),
+                w_hat, new_params)
+            anchor = jnp.where(sync_mask[:, None], new_flat[None], anchor)
+            ef = jnp.where(sync_mask[:, None], ef_new, ef)
+            return new_params, w_hat, anchor, ef, costs
+
+        return window
+
+    # -- host loop: chain windows, controllers decide at boundaries ---------
+    def run(self) -> History:
+        sim, cfg = self.sim, self.sim.cfg
+        hist = History()
+        for m in range(self.m):
+            sim._decide(m, 0)
+        t = 0
+        while t < cfg.rounds:
+            # window boundaries are SYNC points only: global params (and
+            # spend) are constant between syncs, so eval points that fall
+            # mid-window are recorded afterwards against the pre-window
+            # params -- identical History to the round-by-round loop
+            te = min(min(sim.next_sync), cfg.rounds)
+            sync_ms = [m for m in range(self.m) if sim.next_sync[m] <= te]
+            length = te - t
+            pad = (1 << (length - 1).bit_length()) - length
+            ts = jnp.asarray(list(range(t, te)) + [te - 1] * pad, jnp.int32)
+            etas = jnp.asarray(
+                [sim._eta(tt) for tt in range(t, te)] + [0.0] * pad,
+                jnp.float32)
+            valid = jnp.asarray([True] * length + [False] * pad)
+            params_before = sim.params
+            (sim.params, self.w_hat, self.anchor, self.ef,
+             costs) = self._window(
+                sim.params, self.w_hat, self.anchor, self.ef,
+                self.data_x, self.data_y, self.n_dev,
+                ts, etas, valid, self._sync_mask(te), self._ks_mat(),
+                k_cap=self._k_cap())
+            rec = [r for r in range(t, te)
+                   if r % cfg.eval_every == 0 or r == cfg.rounds - 1]
+            if rec and rec[-1] == te - 1:
+                last_rec, rec = True, rec[:-1]
+            else:
+                last_rec = False
+            if rec:
+                # mid-window eval points precede this window's sync
+                params_after, sim.params = sim.params, params_before
+                for r in rec:
+                    sim._record(hist, r)
+                sim.params = params_after
+            if sync_ms:
+                costs_np = np.asarray(costs)
+                for m in sync_ms:
+                    # comp cost on host in f64, exactly like the loop engine
+                    ccomp = comp_cost(sim.profiles[m], sim.decisions[m].h)
+                    s = sim.spend[m]
+                    s["energy_j"] += float(costs_np[m, 0]) + ccomp["energy_j"]
+                    s["money"] += float(costs_np[m, 1]) + ccomp["money"]
+                    s["time_s"] += float(costs_np[m, 2]) + ccomp["time_s"]
+                    s["mb"] += float(costs_np[m, 3]) / 1e6
+                for m in sync_ms:
+                    sim._reward_and_decide(m, te - 1)
+            if last_rec:
+                sim._record(hist, te - 1)
+            t = te
+        return hist
+
+    def _sync_mask(self, te: int) -> Array:
+        return jnp.asarray([s <= te for s in self.sim.next_sync])
+
+    def _k_cap(self) -> int:
+        """Static top-k bound for the threshold-based layer selection,
+        rounded to a power of two so DDPG budget changes rarely recompile."""
+        if self.sim.mode == "fedavg":
+            return 1                      # unused by the dense path
+        k_max = max(1, max(sum(dec.ks) for dec in self.sim.decisions))
+        return min(self.d, 1 << (k_max - 1).bit_length())
+
+    def _ks_mat(self) -> Array:
+        """Per-device layer budgets as a traced (M, C) array (topk folds all
+        budget into channel 0; rows are padded/trimmed to the channel count)."""
+        rows = []
+        for dec in self.sim.decisions:
+            ks = list(dec.ks)
+            if self.sim.mode == "topk":
+                ks = [sum(ks)] + [0] * (len(ks) - 1)
+            ks = (ks + [0] * self.n_ch)[: self.n_ch]
+            rows.append(ks)
+        return jnp.asarray(rows, jnp.int32)

@@ -1,0 +1,70 @@
+"""Version-compat shims over the jax sharding API drift (0.4.x vs >= 0.5).
+
+The launch stack targets the modern explicit-sharding surface
+(``jax.make_mesh(axis_types=...)``, ``jax.set_mesh``, ``jax.shard_map`` with
+``axis_names``/``check_vma``), but the pinned CI container ships jax 0.4.37
+where those spell ``jax.make_mesh`` without axis types, the mesh
+resource-env context, and ``jax.experimental.shard_map`` with
+``auto``/``check_rep``.  Everything here is a thin feature-detected
+dispatch -- no behaviour change on new jax.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> "jax.sharding.Mesh":
+    """``jax.make_mesh`` with Auto axis types when the API supports them."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def set_mesh(mesh: "jax.sharding.Mesh") -> "jax.sharding.Mesh":
+    """Install ``mesh`` as the ambient mesh for subsequent jit/pjit calls.
+
+    New jax: ``jax.set_mesh``.  Old jax: enter the legacy resource-env
+    context (and leave it open -- callers use this once at program setup,
+    matching ``jax.set_mesh`` semantics, not as a scoped context).
+    """
+    if hasattr(jax, "set_mesh"):
+        jax.set_mesh(mesh)
+    else:
+        mesh.__enter__()
+    return mesh
+
+
+def shardings(mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree for jit in/out_shardings.
+
+    Every jax version accepts Sharding objects; 0.4.x ``jax.jit`` accepts
+    *only* those (bare PartitionSpecs raise), so call sites route specs
+    through this before handing them to jit.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None):
+    """``jax.shard_map`` manual over ``axis_names`` only (auto elsewhere).
+
+    Old jax spells partial-manual as ``auto=<complement>`` on
+    ``jax.experimental.shard_map.shard_map``; replica/vma checking is
+    disabled on both paths (the LGC step's gather patterns trip it).
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = {"check_vma": False}
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset(mesh.axis_names) - set(axis_names or mesh.axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False, auto=auto)

@@ -34,6 +34,7 @@ from repro.analysis.roofline import analyze_compiled
 from repro.configs import get_config, list_archs
 from repro.launch import sharding_rules as rules
 from repro.launch import shapes as shp
+from repro.launch import compat
 from repro.launch.mesh import fl_axis_name, make_production_mesh
 from repro.launch.steps import (ACCUM_STEPS, LGCStepConfig,
                                 make_lgc_train_step, make_prefill_step,
@@ -57,7 +58,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         cfg = dataclasses.replace(cfg, **cfg_overrides)
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.devices.size
-    jax.set_mesh(mesh)
+    compat.set_mesh(mesh)
     fl_ax = fl_axis_name(mesh)
     if mode in ("lgc", "lgc_sparse", "lgc_bucket", "fedavg") and cfg.fsdp:
         # (a) FL devices must hold whole replicas along the FL axis;
@@ -81,8 +82,8 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             step = make_sync_train_step(
                 cfg, accum_steps=ACCUM_STEPS.get(arch, 1))
             jitted = jax.jit(step,
-                             in_shardings=(pspecs, ospecs, batch_specs),
-                             out_shardings=(pspecs, ospecs, P()))
+                             in_shardings=compat.shardings(mesh, (pspecs, ospecs, batch_specs)),
+                             out_shardings=compat.shardings(mesh, (pspecs, ospecs, P())))
             args = (params_sds, opt_sds, specs)
         else:
             lgc = lgc_cfg or LGCStepConfig(
@@ -97,15 +98,15 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                     lambda x: jnp.zeros(x.shape, jnp.dtype(lgc.ef_dtype)), p),
                 params_sds)
             jitted = jax.jit(step,
-                             in_shardings=(pspecs, pspecs, batch_specs),
-                             out_shardings=(pspecs, pspecs, P()))
+                             in_shardings=compat.shardings(mesh, (pspecs, pspecs, batch_specs)),
+                             out_shardings=compat.shardings(mesh, (pspecs, pspecs, P())))
             args = (params_sds, ef_sds, specs)
         n_tokens = shape.global_batch * shape.seq_len
 
     elif shape.kind == "prefill":
         batch_specs = rules.batch_specs(cfg, specs, mesh)
         step = make_prefill_step(cfg)
-        jitted = jax.jit(step, in_shardings=(pspecs, batch_specs))
+        jitted = jax.jit(step, in_shardings=compat.shardings(mesh, (pspecs, batch_specs)))
         args = (params_sds, specs)
         n_tokens = shape.global_batch * shape.seq_len
 
@@ -114,8 +115,8 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         tok_spec = rules.batch_specs(cfg, {"token": specs["token"]}, mesh)["token"]
         step = make_serve_step(cfg, window=shp.window_for(cfg, shape_name))
         jitted = jax.jit(step,
-                         in_shardings=(pspecs, tok_spec, cspecs),
-                         out_shardings=(tok_spec, cspecs))
+                         in_shardings=compat.shardings(mesh, (pspecs, tok_spec, cspecs)),
+                         out_shardings=compat.shardings(mesh, (tok_spec, cspecs)))
         args = (params_sds, specs["token"], specs["cache"])
         n_tokens = shape.global_batch          # one new token per sequence
 

@@ -15,13 +15,13 @@ from __future__ import annotations
 
 import jax
 
+from .compat import make_mesh, set_mesh  # noqa: F401  (set_mesh re-exported)
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(n_devices: int | None = None, model: int = 1
@@ -30,9 +30,7 @@ def make_host_mesh(n_devices: int | None = None, model: int = 1
     and integration tests."""
     n = n_devices or len(jax.devices())
     assert n % model == 0
-    return jax.make_mesh(
-        (n // model, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n // model, model), ("data", "model"))
 
 
 def fl_axis_name(mesh: jax.sharding.Mesh) -> str:

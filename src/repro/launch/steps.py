@@ -31,6 +31,7 @@ from repro.kernels import ref as kref
 from repro.models import transformer as tf
 from repro.optim.optimizers import (OptimizerConfig, apply_updates,
                                     get_optimizer)
+from . import compat
 from .mesh import fl_axis_name
 
 Array = jax.Array
@@ -292,10 +293,10 @@ def make_lgc_train_step(cfg: ArchConfig, mesh, step_cfg: LGCStepConfig,
 
     def step(params, ef, batch):
         @functools.partial(
-            jax.shard_map, mesh=mesh,
+            compat.shard_map, mesh=mesh,
             in_specs=(P(), P(), batch_in_specs),
             out_specs=(P(), P(), P()),
-            axis_names={fl_ax}, check_vma=False)
+            axis_names={fl_ax})
         def inner(params, ef, batch):
             # ---- H local SGD steps (Alg. 1 line 6) -----------------------
             b_local = jax.tree_util.tree_leaves(batch)[0].shape[0]

@@ -48,6 +48,7 @@ def main():
     from repro.configs import get_config, get_smoke_config
     from repro.data.tokens import TokenPipeline
     from repro.launch import sharding_rules as rules
+    from repro.launch import compat
     from repro.launch.mesh import make_host_mesh
     from repro.launch.steps import (LGCStepConfig, init_ef_tree,
                                     make_lgc_train_step, make_sync_train_step)
@@ -56,7 +57,7 @@ def main():
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh = make_host_mesh(args.devices, model=args.model_parallel)
-    jax.set_mesh(mesh)
+    compat.set_mesh(mesh)
 
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
     n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
@@ -85,8 +86,8 @@ def main():
             opt_state, rules.opt_state_specs(pspecs, opt_state), mesh)
         step = jax.jit(make_sync_train_step(
             cfg, opt_cfg=OptimizerConfig(lr=args.lr)),
-            in_shardings=(pspecs, rules.opt_state_specs(pspecs, opt_state),
-                          bspecs),
+            in_shardings=compat.shardings(mesh, (pspecs, rules.opt_state_specs(pspecs, opt_state),
+                          bspecs)),
             donate_argnums=(0, 1))
         state = (params, opt_state)
         for i in range(args.steps):
@@ -106,7 +107,7 @@ def main():
                        "fedavg": "none"}[args.mode])
         ef = init_ef_tree(params)
         step = jax.jit(make_lgc_train_step(cfg, mesh, lgc, bspecs),
-                       in_shardings=(pspecs, pspecs, bspecs),
+                       in_shardings=compat.shardings(mesh, (pspecs, pspecs, bspecs)),
                        donate_argnums=(0, 1))
         for i in range(args.steps):
             x, y = pipe.next_batch()

@@ -1,0 +1,81 @@
+"""Degrade gracefully when ``hypothesis`` is absent (offline containers).
+
+Property-based tests import ``given``/``settings``/``st`` from here instead
+of from ``hypothesis`` directly.  When the real library is installed it is
+re-exported unchanged; otherwise a minimal deterministic fallback runs each
+property on ``max_examples`` seeded pseudo-random draws -- weaker than real
+shrinking/coverage, but the invariants still get exercised in CI images
+without the dependency.
+
+Only the strategy surface this repo uses is implemented: ``st.integers``
+and ``st.composite``.
+"""
+from __future__ import annotations
+
+try:                                      # pragma: no cover - env dependent
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # pragma: no cover - env dependent
+    import functools
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A draw(rng) closure masquerading as a hypothesis strategy."""
+
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _St:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def composite(fn):
+            """fn(draw, *args) -> value; returns a strategy factory."""
+            def factory(*args, **kwargs):
+                def draw_fn(rng: random.Random):
+                    return fn(lambda strat: strat.draw(rng), *args, **kwargs)
+                return _Strategy(draw_fn)
+            return factory
+
+    st = _St()
+
+    _MAX_EXAMPLES = 20
+
+    def settings(max_examples: int = _MAX_EXAMPLES, **_ignored):
+        """Records max_examples for the @given below it (deadline etc. are
+        accepted and ignored)."""
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies: _Strategy):
+        def deco(fn):
+            import inspect
+
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_compat_max_examples",
+                            getattr(fn, "_compat_max_examples",
+                                    _MAX_EXAMPLES))
+                rng = random.Random(1234)
+                for _ in range(n):
+                    drawn = tuple(s.draw(rng) for s in strategies)
+                    fn(*args, *drawn, **kwargs)
+            # strategies fill the trailing parameters; hide them from pytest
+            # so it does not look for fixtures with those names
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            wrapper.__signature__ = sig.replace(
+                parameters=params[: len(params) - len(strategies)])
+            functools.update_wrapper(wrapper, fn,
+                                     assigned=("__name__", "__doc__",
+                                               "__module__", "__qualname__"))
+            return wrapper
+        return deco

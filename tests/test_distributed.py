@@ -26,7 +26,8 @@ class TestShardingRules:
         out = _run("""
             import jax
             from repro.configs import get_smoke_config, list_archs
-            from repro.launch.mesh import make_host_mesh
+            from repro.launch import compat
+            from repro.launch.mesh import make_host_mesh, set_mesh
             from repro.launch import sharding_rules as rules
             from repro.models import transformer as tf
             mesh = make_host_mesh(8, model=2)
@@ -81,14 +82,15 @@ class TestTrainSteps:
             import jax, jax.numpy as jnp
             from repro.configs import get_smoke_config
             from repro.data.tokens import TokenPipeline
-            from repro.launch.mesh import make_host_mesh
+            from repro.launch import compat
+            from repro.launch.mesh import make_host_mesh, set_mesh
             from repro.launch import sharding_rules as rules
             from repro.launch.steps import make_sync_train_step
             from repro.models import transformer as tf
             from repro.optim.optimizers import OptimizerConfig, get_optimizer
             cfg = get_smoke_config("qwen2-1.5b")
             mesh = make_host_mesh(8, model=2)
-            jax.set_mesh(mesh)
+            set_mesh(mesh)
             params = tf.init_params(cfg, jax.random.PRNGKey(0))
             opt_init, _ = get_optimizer("adamw", OptimizerConfig(lr=1e-3))
             opt = opt_init(params)
@@ -101,8 +103,13 @@ class TestTrainSteps:
             x, y = pipe.next_batch()
             batch = {"tokens": jnp.asarray(x), "labels": jnp.asarray(y)}
             bspecs = rules.batch_specs(cfg, batch, mesh)
-            jstep = jax.jit(step, in_shardings=(
-                pspecs, rules.opt_state_specs(pspecs, opt), bspecs))
+            from jax.sharding import PartitionSpec as P
+            ospecs = rules.opt_state_specs(pspecs, opt)
+            jstep = jax.jit(step,
+                            in_shardings=compat.shardings(
+                                mesh, (pspecs, ospecs, bspecs)),
+                            out_shardings=compat.shardings(
+                                mesh, (pspecs, ospecs, P())))
             losses = []
             for i in range(20):
                 x, y = pipe.next_batch()
@@ -122,14 +129,15 @@ class TestTrainSteps:
             import jax, jax.numpy as jnp
             from repro.configs import get_smoke_config
             from repro.data.tokens import TokenPipeline
-            from repro.launch.mesh import make_host_mesh
+            from repro.launch import compat
+            from repro.launch.mesh import make_host_mesh, set_mesh
             from repro.launch import sharding_rules as rules
             from repro.launch.steps import (LGCStepConfig, init_ef_tree,
                                             make_lgc_train_step)
             from repro.models import transformer as tf
             cfg = get_smoke_config("qwen2-1.5b")
             mesh = make_host_mesh(8, model=1)
-            jax.set_mesh(mesh)
+            set_mesh(mesh)
             params = tf.init_params(cfg, jax.random.PRNGKey(0))
             lgc = LGCStepConfig(local_steps=2, local_lr=5e-3,
                                 sparsity=(0.02, 0.03),
@@ -140,8 +148,12 @@ class TestTrainSteps:
             bspecs = rules.batch_specs(cfg, batch, mesh)
             pspecs = rules.param_specs(cfg, params, mesh)
             params = rules.place(params, pspecs, mesh)
+            from jax.sharding import PartitionSpec as P
             step = jax.jit(make_lgc_train_step(cfg, mesh, lgc, bspecs),
-                           in_shardings=(pspecs, pspecs, bspecs))
+                           in_shardings=compat.shardings(
+                               mesh, (pspecs, pspecs, bspecs)),
+                           out_shardings=compat.shardings(
+                               mesh, (pspecs, pspecs, P())))
             ef = rules.place(init_ef_tree(params), pspecs, mesh)
             losses = []
             for i in range(15):
@@ -168,13 +180,14 @@ class TestServing:
         out = _run("""
             import jax, jax.numpy as jnp
             from repro.configs import get_smoke_config
-            from repro.launch.mesh import make_host_mesh
+            from repro.launch import compat
+            from repro.launch.mesh import make_host_mesh, set_mesh
             from repro.launch import sharding_rules as rules
             from repro.launch.steps import make_serve_step
             from repro.models import transformer as tf
             cfg = get_smoke_config("zamba2-1.2b")
             mesh = make_host_mesh(8, model=2)
-            jax.set_mesh(mesh)
+            set_mesh(mesh)
             params = tf.init_params(cfg, jax.random.PRNGKey(0))
             b = 8
             cache = tf.init_cache(cfg, b, 64)
@@ -186,8 +199,8 @@ class TestServing:
             cache = rules.place(cache, cspecs, mesh)
             tok = rules.place(tok, tspec, mesh)
             step = jax.jit(make_serve_step(cfg),
-                           in_shardings=(pspecs, tspec, cspecs),
-                           out_shardings=(tspec, cspecs))
+                           in_shardings=compat.shardings(mesh, (pspecs, tspec, cspecs)),
+                           out_shardings=compat.shardings(mesh, (tspec, cspecs)))
             for i in range(4):
                 tok, cache = step(params, tok, cache)
             assert int(cache["pos"]) == 4

@@ -59,6 +59,56 @@ class TestAlgorithm1:
         assert np.isfinite(h.loss[-1])
 
 
+class TestEngineEquivalence:
+    """The batched (vmap+scan, one-XLA-program-per-window) engine must
+    reproduce the reference loop engine's trajectory: both draw from the
+    same counter-based key streams, so History agrees to float reduction
+    order."""
+
+    @pytest.mark.parametrize("mode", ["lgc", "fedavg", "topk", "lgc_q8"])
+    def test_history_matches_loop(self, lr_task, mode):
+        cfg = FLConfig(rounds=30, eval_every=10)
+        h_loop = run_baseline(lr_task, cfg, mode, h=4, engine="loop")
+        h_bat = run_baseline(lr_task, cfg, mode, h=4, engine="batched")
+        assert h_loop.step == h_bat.step
+        np.testing.assert_allclose(h_bat.loss, h_loop.loss, atol=1e-4)
+        np.testing.assert_allclose(h_bat.accuracy, h_loop.accuracy, atol=1e-4)
+        np.testing.assert_allclose(h_bat.uplink_mb, h_loop.uplink_mb,
+                                   atol=1e-4)
+        np.testing.assert_allclose(h_bat.energy_j, h_loop.energy_j, rtol=1e-5)
+        np.testing.assert_allclose(h_bat.time_s, h_loop.time_s, rtol=1e-5)
+
+    def test_heterogeneous_gaps_match(self, lr_task):
+        """Devices with different H sync at different rounds; the chunked
+        scan must hit exactly the same sync set as the loop."""
+        cfg = FLConfig(rounds=25, eval_every=8, max_gap=6)
+        hists = {}
+        for engine in ("loop", "batched"):
+            ctrls = [FixedController(h, [200, 300, 400]) for h in (2, 3, 6)]
+            sim = LGCSimulator(lr_task, cfg, ctrls, mode="lgc", engine=engine)
+            hists[engine] = sim.run()
+            assert all(d.h <= cfg.max_gap for d in sim.decisions)
+        np.testing.assert_allclose(hists["batched"].loss, hists["loop"].loss,
+                                   atol=1e-4)
+        np.testing.assert_allclose(hists["batched"].uplink_mb,
+                                   hists["loop"].uplink_mb, atol=1e-4)
+
+    def test_pallas_backend_matches_loop_and_learns(self, lr_task):
+        """backend='pallas' (histogram thresholds + fused EF kernel) is an
+        approximation of the exact rank oracle, but both engines must agree
+        with each other on it, and it must still converge."""
+        cfg = FLConfig(rounds=20, eval_every=10)
+        h_loop = run_baseline(lr_task, cfg, "lgc", h=4,
+                              engine="loop", backend="pallas")
+        h_bat = run_baseline(lr_task, cfg, "lgc", h=4,
+                             engine="batched", backend="pallas")
+        np.testing.assert_allclose(h_bat.loss, h_loop.loss, atol=1e-4)
+        assert h_bat.loss[-1] < h_bat.loss[0]
+
+    def test_batched_is_default_engine(self):
+        assert FLConfig().engine == "batched"
+
+
 class TestTheoremBounds:
     CONSTS = ProblemConstants(mu=0.5, l_smooth=4.0, g2=25.0, sigma2=4.0,
                               b=64, m=3, gamma=0.05, h=4, w0_dist2=10.0)

@@ -61,15 +61,15 @@ class TestHloCostModel:
             import jax, jax.numpy as jnp
             from jax.sharding import PartitionSpec as P
             from repro.analysis.hlo_cost import analyze_hlo
-            mesh = jax.make_mesh((8,), ("data",),
-                                 axis_types=(jax.sharding.AxisType.Auto,))
-            jax.set_mesh(mesh)
+            from repro.launch import compat
+            mesh = compat.make_mesh((8,), ("data",))
+            compat.set_mesh(mesh)
             def f(x, w):
                 return jnp.sum(x @ w)
             x = jax.ShapeDtypeStruct((512, 256), jnp.float32)
             w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
-            comp = jax.jit(f, in_shardings=(P('data', None), P(None, None)),
-                           out_shardings=P()).lower(x, w).compile()
+            comp = jax.jit(f, in_shardings=compat.shardings(mesh, (P('data', None), P(None, None))),
+                           out_shardings=compat.shardings(mesh, P())).lower(x, w).compile()
             c = analyze_hlo(comp.as_text())
             print(c.flops / (2*512*256*256/8), sum(c.coll.values()) >= 4)
         """)

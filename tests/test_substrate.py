@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 
 from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
 from repro.core.channels import (DEFAULT_CHANNELS, DeviceProfile, comm_cost,
