@@ -1,0 +1,99 @@
+"""Controller overhead per sync boundary: FleetDDPG vs per-agent loop.
+
+The paper's control plane makes every device act / observe / train at each
+synchronization.  The legacy path is M per-device agents behind the
+ControllerFleet shim -- M host round-trips (act dispatch + replay insert +
+train step + select) per boundary.  FleetDDPG stacks the M agents into
+(M, .) pytrees and serves the whole boundary with one jitted call per
+stage.  Both are driven through an identical synthetic spend trajectory
+(training engaged), timed over steady-state boundaries, and checked for
+bit-identical decisions.
+
+Writes ``BENCH_controller.json`` (rows per M + the decision-equivalence
+flag) via benchmarks.run; standalone: --out/--ms/--events.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import ControllerFleet
+from repro.core.controller import DDPGConfig, DDPGController, FleetDDPG
+
+from .common import emit
+
+STATE_STEP = np.array([10.0, 0.01, 1.0, 0.5])
+K_TOTAL = 4000
+BATCH = 8
+
+
+def _controllers(kind: str, m: int, seed: int = 0):
+    cfg = lambda s: DDPGConfig(k_total_max=K_TOTAL, batch_size=BATCH, seed=s)
+    if kind == "fleet":
+        return FleetDDPG(m, cfg(seed))
+    return ControllerFleet(
+        [DDPGController(cfg(seed + 17 * i)) for i in range(m)])
+
+
+def _drive(fleet, m: int, warmup: int, iters: int, seed: int = 0):
+    """Run act+observe boundaries on a synthetic spend trajectory; returns
+    (us_per_sync, decision trace)."""
+    rng = np.random.RandomState(seed)
+    state = np.zeros((m, 4))
+    decisions = []
+
+    def boundary():
+        nonlocal state
+        h, ks = fleet.act(state.astype(np.float32))
+        decisions.append((tuple(int(x) for x in h),
+                          tuple(tuple(int(k) for k in row) for row in ks)))
+        state = state + rng.rand(m, 4) * STATE_STEP
+        fleet.observe(rng.randn(m) * 0.05, state.astype(np.float32))
+        return h
+
+    for _ in range(warmup):
+        boundary()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        boundary()
+    dt = time.perf_counter() - t0
+    return dt / iters * 1e6, decisions
+
+
+def run(ms=(8, 64), warmup: int = 10, iters: int = 10,
+        emit_csv: bool = True) -> dict:
+    rows = []
+    match = True
+    for m in ms:
+        us_list, dec_list = _drive(_controllers("list", m), m, warmup, iters)
+        us_fleet, dec_fleet = _drive(_controllers("fleet", m), m, warmup,
+                                     iters)
+        match &= dec_list == dec_fleet
+        speedup = us_list / us_fleet
+        rows.append({"m": int(m), "per_agent_us_per_sync": us_list,
+                     "fleet_us_per_sync": us_fleet, "speedup": speedup})
+        if emit_csv:
+            emit(f"controller_scaling_m{m}", us_fleet,
+                 f"per_agent_us={us_list:.0f};speedup={speedup:.1f}x;"
+                 f"decisions_match={dec_list == dec_fleet}")
+    return {"rows": rows, "decisions_match": bool(match),
+            "batch_size": BATCH, "warmup": warmup, "iters": iters}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ms", type=int, nargs="+", default=[8, 64])
+    ap.add_argument("--events", type=int, default=10,
+                    help="timed boundaries per config")
+    ap.add_argument("--out", default="BENCH_controller.json")
+    args = ap.parse_args()
+    res = run(ms=tuple(args.ms), iters=args.events)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

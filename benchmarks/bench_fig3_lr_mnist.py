@@ -13,8 +13,8 @@ import time
 
 import jax
 
-from repro.core import FLConfig, LGCSimulator, run_baseline, tree_size
-from repro.core.controller import make_ddpg_controllers
+from repro.core import (FLConfig, LGCSimulator, make_fleet_ddpg,
+                        run_baseline, tree_size)
 from repro.models.paper_models import make_mnist_task
 
 from .common import emit
@@ -38,13 +38,13 @@ def run(model: str = "lr", rounds: int = 150, n_train: int = 3000,
                  f"energy_j={h.energy_j[-1]:.0f};money={h.money[-1]:.4f};"
                  f"uplink_mb={h.uplink_mb[-1]:.2f}")
 
-    # LGC + DDPG (the paper's full system)
+    # LGC + DDPG (the paper's full system; one jitted fleet call/boundary)
     d = tree_size(task.init(jax.random.PRNGKey(0)))
-    ctrls = make_ddpg_controllers(3, d)
+    fleet = make_fleet_ddpg(3, d)
     t0 = time.time()
-    h = LGCSimulator(task, cfg, ctrls, mode="lgc").run()
+    h = LGCSimulator(task, cfg, fleet, mode="lgc").run()
     out["lgc_ddpg"] = h.asdict()
-    out["ddpg_rewards"] = [float(r) for c in ctrls for r in c.rewards]
+    out["ddpg_rewards"] = [float(r) for rs in fleet.rewards for r in rs]
     if emit_csv:
         emit(f"fig3_{model}_lgc_ddpg", (time.time() - t0) * 1e6 / rounds,
              f"acc={h.accuracy[-1]:.3f};loss={h.loss[-1]:.3f};"

@@ -12,8 +12,7 @@ import time
 import numpy as np
 import jax
 
-from repro.core import FLConfig, LGCSimulator, tree_size
-from repro.core.controller import make_ddpg_controllers
+from repro.core import FLConfig, LGCSimulator, make_fleet_ddpg, tree_size
 from repro.models.paper_models import make_mnist_task
 
 from .common import emit
@@ -29,13 +28,13 @@ def _slope(xs) -> float:
 def run(rounds: int = 200, emit_csv: bool = True) -> dict:
     task = make_mnist_task("lr", m_devices=3, n_train=2000)
     d = tree_size(task.init(jax.random.PRNGKey(0)))
-    ctrls = make_ddpg_controllers(3, d)
+    fleet = make_fleet_ddpg(3, d)
     cfg = FLConfig(rounds=rounds, eval_every=max(rounds // 8, 1))
     t0 = time.time()
-    LGCSimulator(task, cfg, ctrls, mode="lgc").run()
+    LGCSimulator(task, cfg, fleet, mode="lgc").run()
     dt = time.time() - t0
-    rewards = [float(r) for c in ctrls for r in c.rewards]
-    closses = [float(l) for c in ctrls for l in c.critic_losses]
+    rewards = [float(r) for rs in fleet.rewards for r in rs]
+    closses = [float(l) for ls in fleet.critic_losses for l in ls]
     # windowed means (the paper's per-episode curves)
     w = max(len(rewards) // 8, 1)
     reward_curve = [float(np.mean(rewards[i:i + w]))

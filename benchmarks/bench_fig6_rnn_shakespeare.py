@@ -7,8 +7,8 @@ import time
 
 import jax
 
-from repro.core import FLConfig, LGCSimulator, run_baseline, tree_size
-from repro.core.controller import make_ddpg_controllers
+from repro.core import (FLConfig, LGCSimulator, make_fleet_ddpg,
+                        run_baseline, tree_size)
 from repro.models.paper_models import make_shakespeare_task
 
 from .common import emit
@@ -28,9 +28,9 @@ def run(rounds: int = 60, emit_csv: bool = True) -> dict:
                  f"acc={h.accuracy[-1]:.3f};loss={h.loss[-1]:.3f};"
                  f"energy_j={h.energy_j[-1]:.0f};money={h.money[-1]:.4f}")
     d = tree_size(task.init(jax.random.PRNGKey(0)))
-    ctrls = make_ddpg_controllers(3, d)
+    fleet = make_fleet_ddpg(3, d)
     t0 = time.time()
-    h = LGCSimulator(task, cfg, ctrls, mode="lgc").run()
+    h = LGCSimulator(task, cfg, fleet, mode="lgc").run()
     out["lgc_ddpg"] = h.asdict()
     if emit_csv:
         emit(f"fig6_rnn_lgc_ddpg", (time.time() - t0) * 1e6 / rounds,

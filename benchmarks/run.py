@@ -20,9 +20,12 @@ def main() -> None:
                     help="reduced budgets + small device counts (CI)")
     ap.add_argument("--sim-json", default="BENCH_sim.json",
                     help="path for the machine-readable scaling rows")
+    ap.add_argument("--controller-json", default="BENCH_controller.json",
+                    help="path for the controller fleet-vs-list rows")
     args = ap.parse_args()
 
     from benchmarks import (bench_compressor_throughput,
+                            bench_controller_scaling,
                             bench_convergence_bound, bench_fig3_lr_mnist,
                             bench_fig5_drl, bench_fig6_rnn_shakespeare,
                             bench_sim_scaling, bench_table1_channels)
@@ -32,9 +35,11 @@ def main() -> None:
     bench_compressor_throughput.run(sizes=(65_536,))             # kernels
     if args.smoke:
         sim = bench_sim_scaling.run(ms=(8, 16), rounds=24)       # scaling
+        ctrl = bench_controller_scaling.run(ms=(8, 64))          # fleet DDPG
         bench_fig3_lr_mnist.run(model="lr", rounds=40, n_train=1200)
     else:
         sim = bench_sim_scaling.run(ms=(8, 64, 256), rounds=200)
+        ctrl = bench_controller_scaling.run(ms=(8, 64, 256))
         bench_fig3_lr_mnist.run(model="lr", rounds=100, n_train=2000)  # Fig 3
         bench_fig3_lr_mnist.run(model="cnn", rounds=40, n_train=1500)  # Fig 4
         bench_fig5_drl.run(rounds=120)                           # Fig 5
@@ -42,6 +47,8 @@ def main() -> None:
 
     with open(args.sim_json, "w") as f:
         json.dump(sim, f, indent=1)
+    with open(args.controller_json, "w") as f:
+        json.dump(ctrl, f, indent=1)
 
 
 if __name__ == '__main__':

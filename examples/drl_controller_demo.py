@@ -1,20 +1,20 @@
-"""DRL control demo (paper §3): DDPG agents adapt H and the layer-to-channel
-allocation as channel conditions shift mid-training.
+"""DRL control demo (paper §3): a DDPG fleet adapts H and the
+layer-to-channel allocation as channel conditions shift mid-training.
 
 Halfway through, the 5G channel becomes unreliable and expensive; the
-learned controllers shift traffic toward the cheaper channels while the
-fixed controller keeps paying.
+learned controller bank shifts traffic toward the cheaper channels while
+the fixed controller keeps paying.  All M agents act, observe and train
+through one jitted fleet call per sync boundary (FleetDDPG).
 
   PYTHONPATH=src python examples/drl_controller_demo.py
 """
-import dataclasses
-
 import jax
 import numpy as np
 
-from repro.core import FLConfig, FixedController, LGCSimulator, tree_size
+from repro.core import (FixedController, FLConfig, LGCSimulator,
+                        make_fleet_ddpg, tree_size)
 from repro.core.channels import DEFAULT_CHANNELS, ChannelSpec
-from repro.core.controller import make_ddpg_controllers
+
 from repro.models.paper_models import make_mnist_task
 
 DEGRADED = (
@@ -35,18 +35,33 @@ def run_phase(task, ctrls, channels, rounds, mode="lgc"):
     return h, sim
 
 
+# a representative spend state to probe the learned policies with
+PROBE = np.tile(np.array([1e3, 0.01, 10, 1], np.float32), (3, 1))
+
+
+def print_allocation(fleet, states):
+    """The public greedy-policy API: no exploration noise, no stream use."""
+    h, ks = fleet.allocation(states)
+    for m in range(fleet.m):
+        frac = ks[m] / ks[m].sum()
+        trend = np.mean(fleet.rewards[m][-5:]) if fleet.rewards[m] else 0.0
+        print(f"  device {m}: H={int(h[m])} channel split "
+              f"3G={frac[0]:.2f} 4G={frac[1]:.2f} 5G={frac[2]:.2f} "
+              f"(reward trend {trend:+.3f})")
+
+
 def main():
     task = make_mnist_task("lr", m_devices=3, n_train=2000)
     d = tree_size(task.init(jax.random.PRNGKey(0)))
 
     print("== phase 1: nominal channels (3G/4G/5G) ==")
-    ddpg = make_ddpg_controllers(3, d)
-    h1, sim1 = run_phase(task, ddpg, DEFAULT_CHANNELS, 80)
-    alloc1 = [np.array(c._to_decision(np.zeros(4)).ks) for c in ddpg]
+    fleet = make_fleet_ddpg(3, d)
+    h1, _ = run_phase(task, fleet, DEFAULT_CHANNELS, 80)
     print(f"  loss {h1.loss[-1]:.3f}, energy {h1.energy_j[-1]:.0f} J")
+    print_allocation(fleet, PROBE)
 
     print("== phase 2: 5G degraded (3x energy, 4x money, 60% uptime) ==")
-    h2, sim2 = run_phase(task, ddpg, DEGRADED, 80)
+    h2, _ = run_phase(task, fleet, DEGRADED, 80)
     print(f"  loss {h2.loss[-1]:.3f}, energy {h2.energy_j[-1]:.0f} J")
 
     fixed = [FixedController(4, [d // 60, d // 40, d // 40])
@@ -56,13 +71,8 @@ def main():
           f"energy {h3.energy_j[-1]:.0f} J ==")
 
     # learned allocation after adaptation
-    for m, c in enumerate(ddpg):
-        dec = c.act(np.array([1e3, 0.01, 10, 1], np.float32))
-        frac = np.array(dec.ks) / sum(dec.ks)
-        print(f"  device {m}: H={dec.h} channel split "
-              f"3G={frac[0]:.2f} 4G={frac[1]:.2f} 5G={frac[2]:.2f} "
-              f"(reward trend {np.mean(c.rewards[-5:]) if c.rewards else 0:+.3f})")
-    print("\nThe DDPG agents steer allocation away from the degraded 5G "
+    print_allocation(fleet, PROBE)
+    print("\nThe DDPG fleet steers allocation away from the degraded 5G "
           "channel (paper §3 behaviour).")
 
 

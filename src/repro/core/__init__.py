@@ -6,8 +6,10 @@ from .compressor import (LGCCompressor, flatten_tree, lgc_compress, lgc_layers,
 from .error_feedback import EFState, ef_compress, init_ef
 from .channels import (DEFAULT_CHANNELS, ChannelSpec, DeviceProfile,
                        comm_cost, comp_cost, sample_channels)
-from .fl import (FLConfig, FLTask, FixedController, History, LGCSimulator,
-                 RoundDecision, run_baseline)
+from .fl import (ControllerFleet, FLConfig, FLTask, FixedController, History,
+                 LGCSimulator, RoundDecision, run_baseline)
+from .controller import (DDPGConfig, DDPGController, FleetDDPG,
+                         make_ddpg_controllers, make_fleet_ddpg)
 from .convergence import ProblemConstants, corollary1_rate, theorem1_bound
 
 __all__ = [
@@ -17,7 +19,9 @@ __all__ = [
     "EFState", "ef_compress", "init_ef",
     "DEFAULT_CHANNELS", "ChannelSpec", "DeviceProfile", "comm_cost",
     "comp_cost", "sample_channels",
-    "FLConfig", "FLTask", "FixedController", "History", "LGCSimulator",
-    "RoundDecision", "run_baseline",
+    "ControllerFleet", "FLConfig", "FLTask", "FixedController", "History",
+    "LGCSimulator", "RoundDecision", "run_baseline",
+    "DDPGConfig", "DDPGController", "FleetDDPG",
+    "make_ddpg_controllers", "make_fleet_ddpg",
     "ProblemConstants", "corollary1_rate", "theorem1_bound",
 ]

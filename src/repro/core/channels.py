@@ -101,7 +101,9 @@ def comm_cost(sample: ChannelSample, bytes_per_channel: Sequence[int]
     across channels; energy/money are sums.  Dropped channels transmit
     nothing (their layer is lost for this round).
     """
-    mb = jnp.array([b / 1e6 for b in bytes_per_channel])
+    # f32 byte counts divided in f32, matching the batched engine's in-program
+    # accounting bit-for-bit (counts are integer-valued, exact below 2^24)
+    mb = jnp.asarray(bytes_per_channel, jnp.float32) / 1e6
     return comm_cost_mb(sample, mb)
 
 

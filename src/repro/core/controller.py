@@ -10,19 +10,36 @@ Reward (Eq. 14-16): weighted ratio of utility U = (loss drop)/(spend).
 
 DDPG (Lillicrap et al. 2015): deterministic actor pi(s|theta_pi), critic
 Q(s,a|theta_Q), replay buffer, soft target networks, Gaussian exploration
-noise.  Pure JAX (MLPs + Adam from repro.optim), numpy ring replay buffer.
+noise.
+
+Two views share every piece of math, every compiled program, and the
+counter-based :func:`repro.core.fl.stream_key` randomness (exploration
+noise on ``TAG_CTRL_NOISE``, replay sampling on ``TAG_CTRL_SAMPLE``), so
+they are bit-identical for a fixed seed:
+
+* :class:`FleetDDPG`      -- M agents stacked into leading-axis-(M, .)
+  pytrees with a device-axis JAX replay buffer; act / exploration noise /
+  the DDPG train step run as lax.map'd (M, .) programs so a constant
+  number of jitted calls serves the whole fleet per sync boundary (the
+  batched controller protocol in :mod:`repro.core.fl`).  Device m is
+  seeded ``PRNGKey(seed + 17*m)``.
+* :class:`DDPGController` -- one agent, one device: a fleet of size one
+  exposing the classic per-device interface; element m of
+  :func:`make_ddpg_controllers` equals device m of
+  :func:`make_fleet_ddpg`, bit for bit.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fl import RoundDecision
-from repro.optim.optimizers import (OptimizerConfig, adamw_init, adamw_update,
+from repro.core.fl import (TAG_CTRL_NOISE, TAG_CTRL_SAMPLE, RoundDecision,
+                           stream_key)
+from repro.optim.optimizers import (AdamWState, OptimizerConfig, adamw_update,
                                     apply_updates)
 
 Array = jax.Array
@@ -50,6 +67,173 @@ def _mlp_apply(params, x, final_tanh=False):
 
 
 # ---------------------------------------------------------------------------
+# shared pure pieces: state norm, action decode, act, train step
+# ---------------------------------------------------------------------------
+
+def _norm_states(states: np.ndarray) -> np.ndarray:
+    """log-scale resources so the MLPs see O(1) numbers."""
+    return np.log1p(np.maximum(states, 0)).astype(np.float32)
+
+
+def decode_actions(a: np.ndarray, h_max: int, k_total_max: int,
+                   n_channels: int) -> tuple[np.ndarray, np.ndarray]:
+    """Decode raw tanh actions ``(..., 1+C)`` into ``h (...,)`` local-step
+    counts and ``ks (..., C)`` per-channel budgets with ``1 <= ks`` and
+    ``sum(ks) <= max(n_channels, k_total_max)``.
+
+    Elementwise numpy, so decoding one action and decoding a stacked batch
+    of them are bit-identical -- the fleet and the per-device agents share
+    this decoder.
+    """
+    a = np.asarray(a, np.float32)
+    squeeze = a.ndim == 1
+    a = np.atleast_2d(a)
+    h = np.rint((a[:, 0] + 1) / 2 * (h_max - 1)).astype(np.int64) + 1
+    # channel allocations: softmax-ish positive split of the budget
+    w = np.exp(2.0 * a[:, 1:])
+    w = w / w.sum(-1, keepdims=True)
+    k_total = max(n_channels, k_total_max)
+    ks = np.maximum((w * k_total).astype(np.int64), 1)
+    # raising rounded-down layers to >= 1 can overshoot the budget by up to
+    # C-1 coordinates; shave the largest layer until the budget holds (the
+    # largest is >= 2 whenever the sum exceeds k_total >= C, so ks stays >= 1)
+    for _ in range(n_channels):
+        over = ks.sum(-1) > k_total
+        if not over.any():
+            break
+        rows = np.nonzero(over)[0]
+        ks[rows, np.argmax(ks[rows], -1)] -= 1
+    if squeeze:
+        return h[0], ks[0]
+    return h, ks
+
+
+def _act_raw(actor, s, key, sigma):
+    """Deterministic policy + clipped Gaussian exploration noise."""
+    a = _mlp_apply(actor, s, final_tanh=True)
+    return jnp.clip(a + sigma * jax.random.normal(key, a.shape), -1.0, 1.0)
+
+
+# The fleet runs its per-device float math through lax.map (one scanned
+# program), NOT vmap: XLA:CPU lowers batched matmul / tanh to batch-shape-
+# dependent vectorized kernels whose FMA/fusion schedules drift ulps across
+# batch sizes, while a scan body is one computation whose compilation does
+# not depend on the trip count.  One jitted dispatch per fleet call either
+# way -- which is what removes the M host round-trips -- and a size-1 fleet
+# (DDPGController) runs the same programs, so list and fleet are
+# bit-identical.
+
+@jax.jit
+def _act_fleet(actor, s, bases, n_acts, sigmas):
+    return jax.lax.map(
+        lambda args: _act_raw(args[0], args[1],
+                              stream_key(args[2], TAG_CTRL_NOISE, args[3]),
+                              args[4]),
+        (actor, s, bases, n_acts, sigmas))
+
+
+@jax.jit
+def _policy_fleet(actor, s):
+    return jax.lax.map(lambda args: _mlp_apply(args[0], args[1],
+                                               final_tanh=True), (actor, s))
+
+
+@functools.lru_cache(maxsize=None)
+def _train_step(gamma: float, tau: float, lr: float):
+    """One DDPG update (critic TD step, actor ascent, soft target update);
+    pure, the lax.map body of the fleet train program."""
+    ocfg = OptimizerConfig(lr=lr, warmup_steps=1, weight_decay=0.0)
+
+    def critic_loss(critic, actor_t, critic_t, s, a, r, s2):
+        a2 = _mlp_apply(actor_t, s2, final_tanh=True)
+        q_next = _mlp_apply(critic_t, jnp.concatenate([s2, a2], -1))[:, 0]
+        y = r + gamma * q_next                          # Eq. (18)
+        q = _mlp_apply(critic, jnp.concatenate([s, a], -1))[:, 0]
+        return jnp.mean((q - jax.lax.stop_gradient(y)) ** 2)
+
+    def actor_loss(actor, critic, s):
+        a = _mlp_apply(actor, s, final_tanh=True)
+        q = _mlp_apply(critic, jnp.concatenate([s, a], -1))
+        return -jnp.mean(q)
+
+    def step(actor, critic, actor_t, critic_t, opt_a, opt_c, s, a, r, s2):
+        cl, gc = jax.value_and_grad(critic_loss)(critic, actor_t,
+                                                 critic_t, s, a, r, s2)
+        upd, opt_c = adamw_update(ocfg, gc, opt_c, critic)
+        critic = apply_updates(critic, upd)
+        al, ga = jax.value_and_grad(actor_loss)(actor, critic, s)
+        upd, opt_a = adamw_update(ocfg, ga, opt_a, actor)
+        actor = apply_updates(actor, upd)
+        soft = lambda t, o: jax.tree_util.tree_map(
+            lambda x, y: (1 - tau) * x + tau * y, t, o)
+        return actor, critic, soft(actor_t, actor), soft(critic_t, critic), \
+            opt_a, opt_c, cl
+
+    return step
+
+
+@functools.lru_cache(maxsize=None)
+def _insert_sample_jit(batch_size: int, capacity: int):
+    """Ring-buffer insert + per-device replay sampling for a whole fleet:
+    exact memory ops + counter-based key bits, one jitted call."""
+
+    def add_row(buf, i, v):
+        return jax.lax.dynamic_update_slice(
+            buf, v[None].astype(buf.dtype), (i,) + (0,) * v.ndim)
+
+    def insert_sample(buf_s, buf_a, buf_r, buf_s2, n, idx,
+                      s, a, r, s2, add_mask, bases, n_trains):
+        ins = jax.vmap(lambda B, i, v, mk: jnp.where(mk, add_row(B, i, v), B))
+        buf_s = ins(buf_s, idx, s, add_mask)
+        buf_a = ins(buf_a, idx, a, add_mask)
+        buf_r = ins(buf_r, idx, r, add_mask)
+        buf_s2 = ins(buf_s2, idx, s2, add_mask)
+        n2 = jnp.where(add_mask, jnp.minimum(n + 1, capacity), n)
+        idx2 = jnp.where(add_mask, (idx + 1) % capacity, idx)
+        train_mask = add_mask & (n2 >= batch_size)
+        sample = jax.vmap(lambda base, n_train, nn:
+                          jax.random.randint(
+                              stream_key(base, TAG_CTRL_SAMPLE, n_train),
+                              (batch_size,), 0, jnp.maximum(nn, 1)))
+        sidx = sample(bases, n_trains, n2)                   # (M, B)
+        gather = jax.vmap(lambda B, i: B[i])
+        batch = (gather(buf_s, sidx), gather(buf_a, sidx),
+                 gather(buf_r, sidx), gather(buf_s2, sidx))
+        return buf_s, buf_a, buf_r, buf_s2, n2, idx2, train_mask, batch
+
+    return jax.jit(insert_sample)
+
+
+@functools.lru_cache(maxsize=None)
+def _train_fleet_jit(gamma: float, tau: float, lr: float):
+    """The fleet train program: lax.map of the per-device DDPG step.
+
+    lax.map (one scanned program), NOT vmap, and in its OWN jit: XLA:CPU
+    picks batch-shape-dependent matmul/tanh kernels for (M, B, .) shapes --
+    and module-level fusion can perturb them too -- so anything else drifts
+    ulps from the per-device agents.  The scan body here compiles to exactly
+    the single-device program, keeping the fleet bit-identical to a
+    DDPGController list."""
+    step = _train_step(gamma, tau, lr)
+    return jax.jit(lambda stacks, s, a, r, s2: jax.lax.map(
+        lambda args: step(*args), (*stacks, s, a, r, s2)))
+
+
+@jax.jit
+def _gather_rows(tree, idx):
+    """Take device rows ``idx`` from every leaf (exact memory op)."""
+    return jax.tree_util.tree_map(lambda x: x[idx], tree)
+
+
+@jax.jit
+def _scatter_rows(dst, src, idx):
+    """Write ``src`` rows back at device rows ``idx``.  ``idx`` may repeat
+    (padding rows duplicate a real device); duplicates carry identical
+    values, so the scatter is deterministic."""
+    return jax.tree_util.tree_map(lambda d, s: d.at[idx].set(s), dst, src)
+
+
+# ---------------------------------------------------------------------------
 # DDPG agent
 # ---------------------------------------------------------------------------
 
@@ -71,6 +255,10 @@ class DDPGConfig:
 
 
 class ReplayBuffer:
+    """Host-side reference of the fleet's device-axis ring buffer semantics
+    (insert at idx mod capacity, uniform sample over the filled prefix);
+    exercised by tests, not by the production controllers."""
+
     def __init__(self, capacity: int, state_dim: int, action_dim: int):
         self.s = np.zeros((capacity, state_dim), np.float32)
         self.a = np.zeros((capacity, action_dim), np.float32)
@@ -90,119 +278,234 @@ class ReplayBuffer:
 
 
 class DDPGController:
-    """Implements the fl.py controller interface (act / reward)."""
+    """One device's agent: the per-device view of a single-device fleet.
+
+    Implements the classic controller interface (``act(state) ->
+    RoundDecision``, ``reward(loss_drop, new_state)``) consumed through the
+    :class:`repro.core.fl.ControllerFleet` shim.  Internally this is a
+    :class:`FleetDDPG` of size one -- the per-device and fleet paths run
+    the *same* compiled programs (XLA:CPU picks value-visible FMA/fusion
+    schedules per program, so sharing the executables, not just the math,
+    is what makes a list of these bit-identical to one (M, .) fleet).
+    """
 
     def __init__(self, cfg: DDPGConfig):
         self.cfg = cfg
         self.action_dim = 1 + cfg.n_channels
-        key = jax.random.PRNGKey(cfg.seed)
-        ka, kc = jax.random.split(key)
-        self.actor = _mlp_init(ka, [cfg.state_dim, cfg.hidden, cfg.hidden,
-                                    self.action_dim])
-        self.critic = _mlp_init(kc, [cfg.state_dim + self.action_dim,
-                                     cfg.hidden, cfg.hidden, 1])
-        self.actor_t = jax.tree_util.tree_map(jnp.copy, self.actor)
-        self.critic_t = jax.tree_util.tree_map(jnp.copy, self.critic)
-        ocfg = OptimizerConfig(lr=cfg.lr, warmup_steps=1, weight_decay=0.0)
-        self._ocfg = ocfg
-        self.opt_a = adamw_init(self.actor)
-        self.opt_c = adamw_init(self.critic)
-        self.buffer = ReplayBuffer(cfg.buffer_size, cfg.state_dim,
-                                   self.action_dim)
-        self._rng = np.random.default_rng(cfg.seed)
-        self.sigma = cfg.noise_sigma
-        self._last: tuple | None = None     # (state, raw_action)
-        self.critic_losses: list[float] = []
-        self.rewards: list[float] = []
-        self._train_step = jax.jit(self._make_train_step())
+        self._fleet = FleetDDPG(1, cfg)
+
+    # -- stacked state, exposed unstacked (row 0) ------------------------
+    @property
+    def actor(self):
+        return jax.tree_util.tree_map(lambda x: x[0], self._fleet.actor)
+
+    @property
+    def critic(self):
+        return jax.tree_util.tree_map(lambda x: x[0], self._fleet.critic)
+
+    @property
+    def actor_t(self):
+        return jax.tree_util.tree_map(lambda x: x[0], self._fleet.actor_t)
+
+    @property
+    def critic_t(self):
+        return jax.tree_util.tree_map(lambda x: x[0], self._fleet.critic_t)
+
+    @property
+    def sigma(self) -> float:
+        return float(self._fleet._sigma[0])
+
+    @property
+    def rewards(self) -> list[float]:
+        return self._fleet.rewards[0]
+
+    @property
+    def critic_losses(self) -> list[float]:
+        return self._fleet.critic_losses[0]
 
     # -- controller interface -------------------------------------------
     def act(self, state: np.ndarray) -> RoundDecision:
-        s = self._norm_state(state)
-        a = np.asarray(_mlp_apply(self.actor, jnp.asarray(s),
-                                  final_tanh=True))
-        a = a + self._rng.normal(0, self.sigma, a.shape)
-        a = np.clip(a, -1, 1)
-        self.sigma *= self.cfg.noise_decay
-        self._last = (s, a.astype(np.float32))
-        return self._to_decision(a)
+        h, ks = self._fleet.act(np.asarray(state, np.float32)[None])
+        return RoundDecision(int(h[0]), [int(k) for k in ks[0]])
+
+    def allocation(self, state: np.ndarray) -> RoundDecision:
+        """Greedy decision for ``state`` (no exploration noise; advances no
+        random stream) -- the public read-only view of the learned policy."""
+        h, ks = self._fleet.allocation(np.asarray(state, np.float32)[None])
+        return RoundDecision(int(h[0]), [int(k) for k in ks[0]])
 
     def reward(self, loss_drop: float, new_state: np.ndarray):
-        """Called by the simulator after the round (Eq. 14-16 computed here
-        from loss drop and the *incremental* spend recorded in the state)."""
-        if self._last is None:
+        """Called by the simulator after the round (Eq. 14-16 computed from
+        loss drop and the *incremental* spend recorded in the state)."""
+        self._fleet.observe(np.array([loss_drop], np.float64),
+                            np.asarray(new_state, np.float32)[None])
+
+
+# ---------------------------------------------------------------------------
+# the fleet: M agents, one jitted call per sync boundary
+# ---------------------------------------------------------------------------
+
+class FleetDDPG:
+    """A bank of M DDPG agents stacked on a leading device axis.
+
+    Implements the batched controller protocol of :mod:`repro.core.fl`:
+    ``act`` runs every masked device's policy + exploration noise in one
+    jitted call; ``observe`` inserts (s, a, r, s') transitions into the
+    device-axis replay buffer, samples replay batches, and runs the DDPG
+    train step for every device whose buffer is warm -- a constant number
+    of jitted calls per boundary, replacing M host round-trips.
+
+    Per-device randomness is counter-based (``stream_key`` on the device's
+    own ``PRNGKey(seed + 17*m)``) and the float math runs through
+    batch-independent lax.map bodies, so a fleet is bit-identical to the
+    list ``make_ddpg_controllers`` builds with the same arguments.
+    """
+
+    def __init__(self, m_devices: int, cfg: DDPGConfig):
+        self.cfg, self.m = cfg, m_devices
+        self.action_dim = 1 + cfg.n_channels
+        bases, actors, critics = [], [], []
+        for i in range(m_devices):
+            base = jax.random.PRNGKey(cfg.seed + 17 * i)
+            ka, kc = jax.random.split(base)
+            bases.append(base)
+            actors.append(_mlp_init(ka, [cfg.state_dim, cfg.hidden,
+                                         cfg.hidden, self.action_dim]))
+            critics.append(_mlp_init(kc, [cfg.state_dim + self.action_dim,
+                                          cfg.hidden, cfg.hidden, 1]))
+        stack = lambda trees: jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *trees)
+        self._bases = jnp.stack(bases)
+        self.actor, self.critic = stack(actors), stack(critics)
+        self.actor_t = jax.tree_util.tree_map(jnp.copy, self.actor)
+        self.critic_t = jax.tree_util.tree_map(jnp.copy, self.critic)
+        self.opt_a = self._opt_init(self.actor)
+        self.opt_c = self._opt_init(self.critic)
+        # device-axis ring replay buffer
+        cap = cfg.buffer_size
+        self._buf_s = jnp.zeros((m_devices, cap, cfg.state_dim), jnp.float32)
+        self._buf_a = jnp.zeros((m_devices, cap, self.action_dim), jnp.float32)
+        self._buf_r = jnp.zeros((m_devices, cap), jnp.float32)
+        self._buf_s2 = jnp.zeros((m_devices, cap, cfg.state_dim), jnp.float32)
+        self._n = np.zeros(m_devices, np.int64)
+        self._idx = np.zeros(m_devices, np.int64)
+        # host-side per-device event counters / exploration schedule
+        self._n_act = np.zeros(m_devices, np.int64)
+        self._n_train = np.zeros(m_devices, np.int64)
+        self._sigma = np.full(m_devices, cfg.noise_sigma, np.float64)
+        self._last_s = np.zeros((m_devices, cfg.state_dim), np.float32)
+        self._last_a = np.zeros((m_devices, self.action_dim), np.float32)
+        self._has_last = np.zeros(m_devices, bool)
+        self.needs_reward = np.ones(m_devices, bool)
+        self.rewards: list[list[float]] = [[] for _ in range(m_devices)]
+        self.critic_losses: list[list[float]] = [[] for _ in range(m_devices)]
+        self._insert_sample = _insert_sample_jit(cfg.batch_size, cap)
+        self._train = _train_fleet_jit(cfg.gamma, cfg.tau, cfg.lr)
+
+    def _opt_init(self, stacked) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(jnp.zeros((self.m,), jnp.int32),
+                          jax.tree_util.tree_map(zeros, stacked),
+                          jax.tree_util.tree_map(zeros, stacked))
+
+    def _mask(self, mask) -> np.ndarray:
+        return (np.ones(self.m, bool) if mask is None
+                else np.asarray(mask, bool))
+
+    # -- batched controller protocol ------------------------------------
+    def act(self, states: np.ndarray, mask: np.ndarray | None = None
+            ) -> tuple[np.ndarray, np.ndarray]:
+        """(h (M,), ks (M, C)) for the masked devices, one jitted call."""
+        mask = self._mask(mask)
+        s = _norm_states(states)
+        a = np.asarray(_act_fleet(
+            self.actor, jnp.asarray(s), self._bases,
+            jnp.asarray(self._n_act, jnp.int32),
+            jnp.asarray(self._sigma, jnp.float32))).astype(np.float32)
+        self._last_s[mask] = s[mask]
+        self._last_a[mask] = a[mask]
+        self._has_last |= mask
+        self._n_act[mask] += 1
+        self._sigma[mask] *= self.cfg.noise_decay
+        cfg = self.cfg
+        return decode_actions(a, cfg.h_max, cfg.k_total_max, cfg.n_channels)
+
+    def observe(self, loss_drops: np.ndarray, new_states: np.ndarray,
+                mask: np.ndarray | None = None):
+        """Reward + replay insert + (buffer-warm) train for all masked
+        devices at once."""
+        mask = self._mask(mask) & self._has_last
+        if not mask.any():
             return
-        s, a = self._last
-        s2 = self._norm_state(new_state)
-        spend = float(np.sum(np.maximum(s2 - s, 1e-6)))
-        r = float(np.clip(loss_drop / spend, -10.0, 10.0))
-        self.rewards.append(r)
-        self.buffer.add(s, a, r, s2)
-        self._last = None
-        if self.buffer.n >= self.cfg.batch_size:
-            self._learn()
+        s2 = _norm_states(new_states)
+        spend = np.maximum(s2 - self._last_s, 1e-6).sum(-1)
+        r = np.clip(np.asarray(loss_drops, np.float64)
+                    / spend.astype(np.float64), -10.0, 10.0)
+        for i in np.nonzero(mask)[0]:
+            self.rewards[i].append(float(r[i]))
+        (self._buf_s, self._buf_a, self._buf_r, self._buf_s2,
+         n2, idx2, train_mask, batch) = self._insert_sample(
+            self._buf_s, self._buf_a, self._buf_r, self._buf_s2,
+            jnp.asarray(self._n, jnp.int32), jnp.asarray(self._idx, jnp.int32),
+            jnp.asarray(self._last_s), jnp.asarray(self._last_a),
+            jnp.asarray(r, jnp.float32), jnp.asarray(s2),
+            jnp.asarray(mask), self._bases,
+            jnp.asarray(self._n_train, jnp.int32))
+        self._n = np.asarray(n2, np.int64)
+        self._idx = np.asarray(idx2, np.int64)
+        tr_idx = np.nonzero(np.asarray(train_mask))[0]
+        if len(tr_idx):
+            # train only the buffer-warm devices: gather their rows, pad to
+            # a power of two (few compiled sizes) by repeating the first
+            # trained device, scan the per-device step over the small stack,
+            # scatter back.  Train cost scales with the trained count, not
+            # M, and the map body stays the shared bit-exact program.
+            p = 1 << (len(tr_idx) - 1).bit_length()
+            pad = jnp.asarray(np.concatenate(
+                [tr_idx, np.full(p - len(tr_idx), tr_idx[0])]), jnp.int32)
+            old = (self.actor, self.critic, self.actor_t, self.critic_t,
+                   self.opt_a, self.opt_c)
+            new = self._train(_gather_rows(old, pad),
+                              *(b[pad] for b in batch))
+            (self.actor, self.critic, self.actor_t, self.critic_t,
+             self.opt_a, self.opt_c) = _scatter_rows(old, new[:6], pad)
+            cl_np = np.asarray(new[6])
+            for j, i in enumerate(tr_idx):
+                self.critic_losses[i].append(float(cl_np[j]))
+            self._n_train[tr_idx] += 1
+        self._has_last[mask] = False
 
-    # -- internals --------------------------------------------------------
-    def _norm_state(self, state: np.ndarray) -> np.ndarray:
-        # log-scale resources so the MLP sees O(1) numbers
-        return np.log1p(np.maximum(state, 0)).astype(np.float32)
-
-    def _to_decision(self, a: np.ndarray) -> RoundDecision:
+    def allocation(self, states: np.ndarray
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        """Greedy (noise-free) decisions for every device; advances no
+        random stream -- the public read-only view of the learned policies.
+        A single (S,) probe state is broadcast to all M devices."""
+        s = _norm_states(np.atleast_2d(states))
+        if s.shape[0] == 1:
+            s = np.broadcast_to(s, (self.m, s.shape[1]))
+        a = np.asarray(_policy_fleet(self.actor, jnp.asarray(s)))
         cfg = self.cfg
-        h = int(round((a[0] + 1) / 2 * (cfg.h_max - 1))) + 1
-        # channel allocations: softmax-ish positive split of the budget
-        w = np.exp(2.0 * a[1:])
-        w = w / w.sum()
-        k_total = max(cfg.n_channels, cfg.k_total_max)
-        ks = np.maximum((w * k_total).astype(int), 1)
-        return RoundDecision(h, [int(k) for k in ks])
-
-    def _make_train_step(self):
-        cfg = self.cfg
-
-        def critic_loss(critic, actor_t, critic_t, s, a, r, s2):
-            a2 = _mlp_apply(actor_t, s2, final_tanh=True)
-            q_next = _mlp_apply(critic_t, jnp.concatenate([s2, a2], -1))[:, 0]
-            y = r + cfg.gamma * q_next                       # Eq. (18)
-            q = _mlp_apply(critic, jnp.concatenate([s, a], -1))[:, 0]
-            return jnp.mean((q - jax.lax.stop_gradient(y)) ** 2)
-
-        def actor_loss(actor, critic, s):
-            a = _mlp_apply(actor, s, final_tanh=True)
-            q = _mlp_apply(critic, jnp.concatenate([s, a], -1))
-            return -jnp.mean(q)
-
-        def step(actor, critic, actor_t, critic_t, opt_a, opt_c, s, a, r, s2):
-            cl, gc = jax.value_and_grad(critic_loss)(critic, actor_t,
-                                                     critic_t, s, a, r, s2)
-            upd, opt_c = adamw_update(self._ocfg, gc, opt_c, critic)
-            critic = apply_updates(critic, upd)
-            al, ga = jax.value_and_grad(actor_loss)(actor, critic, s)
-            upd, opt_a = adamw_update(self._ocfg, ga, opt_a, actor)
-            actor = apply_updates(actor, upd)
-            soft = lambda t, o: jax.tree_util.tree_map(
-                lambda x, y: (1 - cfg.tau) * x + cfg.tau * y, t, o)
-            return actor, critic, soft(actor_t, actor), soft(critic_t, critic), \
-                opt_a, opt_c, cl
-
-        return step
-
-    def _learn(self):
-        s, a, r, s2 = self.buffer.sample(self._rng, self.cfg.batch_size)
-        (self.actor, self.critic, self.actor_t, self.critic_t,
-         self.opt_a, self.opt_c, cl) = self._train_step(
-            self.actor, self.critic, self.actor_t, self.critic_t,
-            self.opt_a, self.opt_c,
-            jnp.asarray(s), jnp.asarray(a), jnp.asarray(r), jnp.asarray(s2))
-        self.critic_losses.append(float(cl))
+        return decode_actions(a, cfg.h_max, cfg.k_total_max, cfg.n_channels)
 
 
 def make_ddpg_controllers(m_devices: int, model_dim: int,
                           n_channels: int = 3, h_max: int = 8,
                           sparsity: float = 0.05, seed: int = 0
                           ) -> list[DDPGController]:
-    """One agent per device (paper: per-device policies)."""
+    """One agent per device (paper: per-device policies); the reference the
+    vectorized :func:`make_fleet_ddpg` bank is bit-identical to."""
     return [DDPGController(DDPGConfig(
         n_channels=n_channels, h_max=h_max,
         k_total_max=max(n_channels, int(model_dim * sparsity)),
         seed=seed + 17 * m)) for m in range(m_devices)]
+
+
+def make_fleet_ddpg(m_devices: int, model_dim: int,
+                    n_channels: int = 3, h_max: int = 8,
+                    sparsity: float = 0.05, seed: int = 0) -> FleetDDPG:
+    """The fleet equivalent of :func:`make_ddpg_controllers` (same per-device
+    seeds, same decisions, one jitted call per sync boundary)."""
+    return FleetDDPG(m_devices, DDPGConfig(
+        n_channels=n_channels, h_max=h_max,
+        k_total_max=max(n_channels, int(model_dim * sparsity)),
+        seed=seed))

@@ -12,8 +12,13 @@ Faithful per-iteration simulator:
       server:           w_global <- w_global - (1/M) sum_{m synced} g_m
 
     Asynchronous sync sets I_m with gap(I_m) <= H (paper Definition 1) are
-produced by the per-device controller: after each sync the controller picks
-H_m (next gap, local computation) and D_{m,n} (coordinates per channel).
+produced by the controller: after each sync it picks H_m (next gap, local
+computation) and D_{m,n} (coordinates per channel).  Both engines talk to
+ONE fleet-shaped controller per simulation through the batched controller
+protocol below (one ``act`` / ``observe`` call per sync boundary with
+(M, .) arrays); per-device controller lists are adapted by the
+:class:`ControllerFleet` shim, and :class:`repro.core.controller.FleetDDPG`
+implements the protocol natively with jitted (M, .) programs.
 
 Two engines implement the same algorithm:
 
@@ -62,8 +67,10 @@ Array = jax.Array
 # ---------------------------------------------------------------------------
 
 # stream tags: minibatch draws, channel realisations, eval subsets,
-# controller-reward eval subsets, QSGD dither
-TAG_BATCH, TAG_CHANNEL, TAG_EVAL, TAG_REWARD, TAG_QUANT = range(5)
+# controller-reward eval subsets, QSGD dither, controller exploration noise,
+# controller replay sampling
+(TAG_BATCH, TAG_CHANNEL, TAG_EVAL, TAG_REWARD, TAG_QUANT,
+ TAG_CTRL_NOISE, TAG_CTRL_SAMPLE) = range(7)
 
 
 def stream_key(base: Array, tag: int, *ids) -> Array:
@@ -131,6 +138,59 @@ class FixedController:
         pass
 
 
+# ---------------------------------------------------------------------------
+# batched controller protocol
+# ---------------------------------------------------------------------------
+#
+# Both engines talk to ONE fleet-shaped controller per simulation instead of
+# M per-device objects.  The protocol (duck-typed):
+#
+#   needs_reward : (M,) bool -- which devices want a reward signal (gates the
+#                  per-device TAG_REWARD eval so fixed fleets skip it)
+#   act(states: (M, S), mask: (M,) bool) -> (h: (M,), ks: (M, C) rows)
+#                  decide H_m and the per-channel budgets for every masked
+#                  device; unmasked rows are ignored and must not advance
+#                  any per-device random stream
+#   observe(loss_drops: (M,), new_states: (M, S), mask: (M,) bool)
+#                  deliver the post-round reward signal to masked devices
+#
+# :class:`ControllerFleet` adapts a list of per-device controllers
+# (.act(state) -> RoundDecision, optional .reward(loss_drop, new_state)) to
+# this protocol; :class:`repro.core.controller.FleetDDPG` implements it
+# natively with one jitted (M, .) call per boundary.
+
+class ControllerFleet:
+    """List->fleet shim over per-device controllers (the reference path)."""
+
+    def __init__(self, controllers: Sequence):
+        self.controllers = list(controllers)
+        self.needs_reward = np.array(
+            [hasattr(c, "reward") for c in self.controllers], bool)
+
+    @property
+    def m(self) -> int:
+        return len(self.controllers)
+
+    def act(self, states: np.ndarray, mask: np.ndarray | None = None):
+        mask = np.ones(self.m, bool) if mask is None else np.asarray(mask)
+        h = np.zeros(self.m, np.int64)
+        ks: list[Sequence[int]] = [()] * self.m
+        for i in np.nonzero(mask)[0]:
+            dec = self.controllers[i].act(np.asarray(states[i]))
+            h[i], ks[i] = dec.h, list(dec.ks)
+        return h, ks
+
+    def observe(self, loss_drops: np.ndarray, new_states: np.ndarray,
+                mask: np.ndarray | None = None):
+        mask = np.ones(self.m, bool) if mask is None else np.asarray(mask)
+        for i in np.nonzero(mask)[0]:
+            c = self.controllers[i]
+            if hasattr(c, "reward"):
+                c.reward(float(loss_drops[i]), np.asarray(new_states[i]))
+            else:
+                c.observe(float(loss_drops[i]), np.asarray(new_states[i]))
+
+
 @dataclasses.dataclass
 class History:
     """Recorded metrics, one entry per eval point / per sync."""
@@ -156,19 +216,28 @@ class LGCSimulator:
     """Runs Algorithm 1 for M devices with per-device controllers."""
 
     def __init__(self, task: FLTask, cfg: FLConfig,
-                 controllers: Sequence, mode: str = "lgc",
+                 controllers, mode: str = "lgc",
                  engine: str | None = None, backend: str | None = None):
         """mode: 'lgc' (layered, multi-channel), 'topk' (single channel),
         'fedavg' (dense upload, fastest channel, no compression),
-        'lgc_q8' (LGC + QSGD int8 values)."""
+        'lgc_q8' (LGC + QSGD int8 values).
+
+        ``controllers`` is either a fleet-shaped controller implementing the
+        batched protocol above, or a sequence of per-device controllers
+        (wrapped in a :class:`ControllerFleet` shim)."""
         self.task, self.cfg, self.mode = task, cfg, mode
         self.engine = engine or cfg.engine
         self.backend = backend or cfg.backend
         assert self.engine in ("batched", "loop"), self.engine
         assert self.backend in ("exact", "pallas"), self.backend
-        self.controllers = list(controllers)
         self.m_devices = len(task.device_data)
-        assert len(self.controllers) == self.m_devices
+        if isinstance(controllers, (list, tuple)):
+            self.fleet = ControllerFleet(controllers)
+            self.controllers = list(controllers)
+        else:
+            self.fleet = controllers
+            self.controllers = list(getattr(controllers, "controllers", ()))
+        assert self.fleet.m == self.m_devices, (self.fleet.m, self.m_devices)
         key = jax.random.PRNGKey(cfg.seed)
         self.params = task.init(key)                 # global model  w_global
         self.d = tree_size(self.params)
@@ -182,6 +251,7 @@ class LGCSimulator:
                    for _ in range(self.m_devices)]
         self.next_sync = [0] * self.m_devices        # t at which device syncs
         self.decisions = [None] * self.m_devices
+        self.decision_log: list[tuple] = []          # (t, m, h, ks) committed
         self.spend = [dict(energy_j=0.0, money=0.0, time_s=0.0, mb=0.0)
                       for _ in range(self.m_devices)]
         self.prev_loss = [None] * self.m_devices
@@ -227,20 +297,28 @@ class LGCSimulator:
                                              jnp.asarray(yb[idx])))
         return float(loss), float(acc)
 
-    def _controller_state(self, m: int) -> np.ndarray:
-        s = self.spend[m]
-        return np.array([s["energy_j"], s["money"], s["time_s"], s["mb"]],
-                        np.float32)
+    def _controller_states(self) -> np.ndarray:
+        """(M, 4) resource spends, the controller state of every device."""
+        return np.array([[s["energy_j"], s["money"], s["time_s"], s["mb"]]
+                         for s in self.spend], np.float32)
 
-    def _decide(self, m: int, t: int):
-        dec = self.controllers[m].act(self._controller_state(m))
-        h = int(np.clip(dec.h, 1, self.cfg.max_gap))
-        # one layer per channel: pad/trim the controller's budgets so both
-        # engines see the same (and the cost model's shapes line up)
+    def _decide_devices(self, ms: Sequence[int], t: int):
+        """One fleet act for all devices in ``ms``; commit their decisions."""
+        ms = list(ms)
+        if not ms:
+            return
+        mask = np.zeros(self.m_devices, bool)
+        mask[ms] = True
+        h_arr, ks_arr = self.fleet.act(self._controller_states(), mask)
         n_ch = len(self.cfg.channels)
-        ks = (list(dec.ks) + [0] * n_ch)[:n_ch]
-        self.decisions[m] = RoundDecision(h, ks)
-        self.next_sync[m] = t + h
+        for m in ms:
+            h = int(np.clip(int(h_arr[m]), 1, self.cfg.max_gap))
+            # one layer per channel: pad/trim the controller's budgets so both
+            # engines see the same (and the cost model's shapes line up)
+            ks = ([int(k) for k in ks_arr[m]] + [0] * n_ch)[:n_ch]
+            self.decisions[m] = RoundDecision(h, ks)
+            self.next_sync[m] = t + h
+            self.decision_log.append((t, m, h, tuple(ks)))
 
     # -- main loop ----------------------------------------------------------
     def run(self) -> History:
@@ -252,28 +330,28 @@ class LGCSimulator:
     def _run_loop(self) -> History:
         hist = History()
         cfg = self.cfg
-        for m in range(self.m_devices):
-            self._decide(m, 0)
+        self._decide_devices(range(self.m_devices), 0)
         for t in range(cfg.rounds):
             eta = self._eta(t)
-            updates, costs = [], []
+            updates, sync_ms = [], []
             for m in range(self.m_devices):
                 batch = self._sample_batch(m, t)
                 self.w_hat[m] = self._sgd_step(self.w_hat[m], batch,
                                                jnp.float32(eta))
                 if t + 1 >= self.next_sync[m]:
-                    g, cost = self._sync_device(m, t)
+                    g, _ = self._sync_device(m, t)
                     updates.append(g)
-                    costs.append((m, cost))
+                    sync_ms.append(m)
             if updates:
                 g_mean = sum(updates) / self.m_devices
                 flat = flatten_tree(self.params) - g_mean
                 self.params = unflatten_like(flat, self.params)
-                for m, _ in costs:
+                for m in sync_ms:
                     # broadcast: device adopts the global model
                     self.w_hat[m] = self.params
                     self.w_anchor[m] = flatten_tree(self.params)
-                    self._reward_and_decide(m, t)
+                self._observe_devices(sync_ms, t)
+                self._decide_devices(sync_ms, t + 1)
             if t % cfg.eval_every == 0 or t == cfg.rounds - 1:
                 self._record(hist, t)
         return hist
@@ -346,16 +424,22 @@ class LGCSimulator:
             self.spend[m][k] += v
         return g, total
 
-    def _reward_and_decide(self, m: int, t: int):
-        """Reward Eq. (14)-(16): utility = (loss drop) / (resource spend)."""
-        ctrl = self.controllers[m]
-        if hasattr(ctrl, "reward"):
+    def _observe_devices(self, ms: Sequence[int], t: int):
+        """Reward Eq. (14)-(16): utility = (loss drop) / (resource spend),
+        delivered to every synced reward-seeking device in one fleet call."""
+        need = [m for m in ms if self.fleet.needs_reward[m]]
+        if not need:
+            return
+        loss_drops = np.zeros(self.m_devices, np.float64)
+        mask = np.zeros(self.m_devices, bool)
+        for m in need:
             loss, _ = self._eval_subset(TAG_REWARD, (t, m), 512)
             if self.prev_loss[m] is not None:
-                ctrl.reward(self.prev_loss[m] - loss,
-                            self._controller_state(m))
+                loss_drops[m] = self.prev_loss[m] - loss
+                mask[m] = True
             self.prev_loss[m] = loss
-        self._decide(m, t + 1)
+        if mask.any():
+            self.fleet.observe(loss_drops, self._controller_states(), mask)
 
     def _record(self, hist: History, t: int):
         loss, acc = self._eval_subset(TAG_EVAL, (t,), 2048)

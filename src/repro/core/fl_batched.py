@@ -15,8 +15,10 @@ window into ONE XLA program:
         byte / energy / money / time accounting
         server mean of the synced devices' updates
 
-Controller decisions (DDPG act / reward) stay host-side at sync boundaries:
-the host loop chains windows, feeding per-device (H_m, k_m) decision arrays
+Controller decisions happen at sync boundaries through the batched fleet
+protocol (:mod:`repro.core.fl`): ONE ``act`` / ``observe`` call with (M, .)
+arrays per boundary (a FleetDDPG serves it with one jitted program).  The
+host loop chains windows, feeding the per-device (H_m, k_m) decision arrays
 back in as *traced* values, so heterogeneous DDPG allocations never trigger
 recompiles (only a new window length L does, and L takes few distinct
 values).
@@ -191,8 +193,7 @@ class BatchedEngine:
     def run(self) -> History:
         sim, cfg = self.sim, self.sim.cfg
         hist = History()
-        for m in range(self.m):
-            sim._decide(m, 0)
+        sim._decide_devices(range(self.m), 0)
         t = 0
         while t < cfg.rounds:
             # window boundaries are SYNC points only: global params (and
@@ -237,8 +238,8 @@ class BatchedEngine:
                     s["money"] += float(costs_np[m, 1]) + ccomp["money"]
                     s["time_s"] += float(costs_np[m, 2]) + ccomp["time_s"]
                     s["mb"] += float(costs_np[m, 3]) / 1e6
-                for m in sync_ms:
-                    sim._reward_and_decide(m, te - 1)
+                sim._observe_devices(sync_ms, te - 1)
+                sim._decide_devices(sync_ms, te)
             if last_rec:
                 sim._record(hist, te - 1)
             t = te
