@@ -1,0 +1,79 @@
+"""Bench regression gate: fail CI when the batched engine slows down.
+
+Compares the batched-engine ``device_steps_per_s`` rows of a freshly
+generated BENCH_sim.json against the committed BENCH_baseline.json and exits
+nonzero when any matching (mode, engine, M) row regresses more than
+``--tolerance`` (default 30%).  Rows present on only one side are reported
+but never fail the gate (new sweeps should not need a baseline update to
+land), and faster-than-baseline rows print so improvements are visible in
+the CI log.
+
+The committed baseline was measured on a 2-core container -- slower than the
+CI runners -- so the gate only trips on real order-of-magnitude regressions
+(a lost jit, an accidental O(M) host loop), not runner jitter.  Refresh it
+with:
+
+    python -m benchmarks.run --smoke && cp BENCH_sim.json BENCH_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(baseline: dict, current: dict, tolerance: float,
+          engines: tuple[str, ...] = ("batched",)) -> list[str]:
+    base_rows = {(r["mode"], r["engine"], r["m_devices"]): r
+                 for r in baseline["rows"]}
+    seen, failures = set(), []
+    for r in current["rows"]:
+        if r["engine"] not in engines:
+            continue
+        key = (r["mode"], r["engine"], r["m_devices"])
+        seen.add(key)
+        b = base_rows.get(key)
+        if b is None:
+            print(f"  new row (no baseline): {key}  "
+                  f"{r['device_steps_per_s']:.1f} device-steps/s")
+            continue
+        floor = b["device_steps_per_s"] * (1.0 - tolerance)
+        ratio = r["device_steps_per_s"] / b["device_steps_per_s"]
+        verdict = "ok" if r["device_steps_per_s"] >= floor else "REGRESSED"
+        print(f"  {verdict:>9}: {key}  baseline "
+              f"{b['device_steps_per_s']:.1f} -> current "
+              f"{r['device_steps_per_s']:.1f} device-steps/s  "
+              f"({ratio:.2f}x, floor {floor:.1f})")
+        if verdict == "REGRESSED":
+            failures.append(f"{key}: {ratio:.2f}x of baseline")
+    for key in set(base_rows) - seen:
+        if base_rows[key]["engine"] in engines:
+            print(f"  baseline row missing from current run: {key}")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--current", default="BENCH_sim.json")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="allowed fractional drop in device_steps_per_s")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    print(f"bench regression gate: tolerance {args.tolerance:.0%} "
+          f"({args.baseline} vs {args.current})")
+    failures = check(baseline, current, args.tolerance)
+    if failures:
+        print("bench regression gate FAILED:")
+        for f_ in failures:
+            print(f"  {f_}")
+        return 1
+    print("bench regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -114,7 +114,7 @@ class FLConfig:
     eval_every: int = 10
     value_bytes: int = 4               # fp32 values on the wire
     index_bytes: int = 4
-    engine: str = "batched"            # "batched" | "loop"
+    engine: str = "batched"            # "batched" | "loop" | "sharded"
     backend: str = "exact"             # "exact" | "pallas"
 
 
@@ -217,18 +217,25 @@ class LGCSimulator:
 
     def __init__(self, task: FLTask, cfg: FLConfig,
                  controllers, mode: str = "lgc",
-                 engine: str | None = None, backend: str | None = None):
+                 engine: str | None = None, backend: str | None = None,
+                 mesh=None, server_reduce: str = "gather"):
         """mode: 'lgc' (layered, multi-channel), 'topk' (single channel),
         'fedavg' (dense upload, fastest channel, no compression),
         'lgc_q8' (LGC + QSGD int8 values).
 
         ``controllers`` is either a fleet-shaped controller implementing the
         batched protocol above, or a sequence of per-device controllers
-        (wrapped in a :class:`ControllerFleet` shim)."""
+        (wrapped in a :class:`ControllerFleet` shim).
+
+        ``engine="sharded"`` partitions the batched engine's device axis over
+        the FL axis of ``mesh`` (default: a host mesh over all present jax
+        devices); ``server_reduce`` picks the collective that crosses the
+        slow axis ("gather" -- bit-identical History -- or "psum")."""
         self.task, self.cfg, self.mode = task, cfg, mode
         self.engine = engine or cfg.engine
         self.backend = backend or cfg.backend
-        assert self.engine in ("batched", "loop"), self.engine
+        self.mesh, self.server_reduce = mesh, server_reduce
+        assert self.engine in ("batched", "loop", "sharded"), self.engine
         assert self.backend in ("exact", "pallas"), self.backend
         self.m_devices = len(task.device_data)
         if isinstance(controllers, (list, tuple)):
@@ -259,6 +266,8 @@ class LGCSimulator:
         self._sgd_step = jax.jit(self._make_sgd_step())
         self._eval = jax.jit(self._make_eval())
         self._base = jax.random.PRNGKey(cfg.seed + 1)   # event-key base
+        self._reward_eval = jax.jit(self._make_reward_eval())
+        self._eval_xy = None            # eval data as jnp arrays, lazily
 
     # -- jitted pieces ------------------------------------------------------
     def _make_sgd_step(self):
@@ -273,6 +282,43 @@ class LGCSimulator:
         def ev(params, batch):
             return self.task.loss_fn(params, batch), self.task.metric_fn(params, batch)
         return ev
+
+    def _make_reward_eval(self):
+        """(M,)-batched TAG_REWARD eval: ONE jitted program per boundary
+        instead of an O(M) host loop of key/gather/eval round-trips.
+
+        The per-device body (keyed 512-subset gather + loss) runs under
+        ``jax.lax.map``, whose compilation is batch-shape independent on
+        XLA:CPU, so each row is bit-identical to the old per-device
+        ``_eval_subset(TAG_REWARD, (t, m), 512)`` path
+        (tests/test_fl.py::TestBatchedRewardEval)."""
+        loss_fn = self.task.loss_fn
+        n = int(self.task.eval_data[0].shape[0])
+        n_take = min(512, n)
+        base = self._base
+
+        def one(params, xe, ye, t, m):
+            key = stream_key(base, TAG_REWARD, t, m)
+            idx = jax.random.randint(key, (n_take,), 0, n)
+            return loss_fn(params, (xe[idx], ye[idx]))
+
+        def batched(params, xe, ye, t, ms):
+            return jax.lax.map(lambda mm: one(params, xe, ye, t, mm), ms)
+        return batched
+
+    def _reward_losses(self, ms: Sequence[int], t: int) -> list[float]:
+        """Per-device keyed-subset eval losses for devices ``ms`` at round
+        ``t``, in one jitted call (rows padded to a power of two so the
+        fleet's varying sync-set sizes compile only a few programs)."""
+        if self._eval_xy is None:
+            xb, yb = self.task.eval_data
+            self._eval_xy = (jnp.asarray(xb), jnp.asarray(yb))
+        ms = list(ms)
+        pad = (1 << max(0, (len(ms) - 1)).bit_length()) - len(ms)
+        rows = jnp.asarray(ms + [ms[-1]] * pad, jnp.int32)
+        losses = self._reward_eval(self.params, *self._eval_xy,
+                                   jnp.int32(t), rows)
+        return [float(l) for l in np.asarray(losses)[: len(ms)]]
 
     # -- helpers ------------------------------------------------------------
     def _eta(self, t: int) -> float:
@@ -325,6 +371,10 @@ class LGCSimulator:
         if self.engine == "batched":
             from .fl_batched import BatchedEngine
             return BatchedEngine(self).run()
+        if self.engine == "sharded":
+            from .fl_batched import ShardedEngine
+            return ShardedEngine(self, mesh=self.mesh,
+                                 server_reduce=self.server_reduce).run()
         return self._run_loop()
 
     def _run_loop(self) -> History:
@@ -432,8 +482,7 @@ class LGCSimulator:
             return
         loss_drops = np.zeros(self.m_devices, np.float64)
         mask = np.zeros(self.m_devices, bool)
-        for m in need:
-            loss, _ = self._eval_subset(TAG_REWARD, (t, m), 512)
+        for m, loss in zip(need, self._reward_losses(need, t)):
             if self.prev_loss[m] is not None:
                 loss_drops[m] = self.prev_loss[m] - loss
                 mask[m] = True
@@ -454,8 +503,8 @@ class LGCSimulator:
 
 def run_baseline(task: FLTask, cfg: FLConfig, mode: str,
                  h: int = 4, ks: Sequence[int] | None = None,
-                 engine: str | None = None, backend: str | None = None
-                 ) -> History:
+                 engine: str | None = None, backend: str | None = None,
+                 mesh=None, server_reduce: str = "gather") -> History:
     """Convenience: FedAvg / LGC-noDRL / Top-k with fixed controllers."""
     m = len(task.device_data)
     if ks is None:
@@ -464,4 +513,5 @@ def run_baseline(task: FLTask, cfg: FLConfig, mode: str,
         ks = [k_total // 2, k_total // 4, k_total - k_total // 2 - k_total // 4]
     ctrls = [FixedController(h, ks) for _ in range(m)]
     return LGCSimulator(task, cfg, ctrls, mode=mode,
-                        engine=engine, backend=backend).run()
+                        engine=engine, backend=backend,
+                        mesh=mesh, server_reduce=server_reduce).run()

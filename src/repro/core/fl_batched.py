@@ -33,10 +33,27 @@ Pallas kernel pipeline (:func:`repro.kernels.lgc_compress_hist`: maxabs +
 256-bin histogram thresholds + fused sparsify/EF), vmapped across the device
 axis; ``backend="exact"`` uses the rank oracle
 (:func:`repro.core.compressor.lgc_compress_traced`).
+
+:class:`ShardedEngine` (``engine="sharded"``) partitions the leading M axis
+over the FL axis of a real mesh (:func:`repro.launch.mesh.fl_axis_name`, via
+the :func:`repro.launch.compat.shard_map` shim): each mesh device simulates
+M/D edge devices locally -- the whole window body (local SGD scan, channel
+sampling, layered compress/EF, cost accounting) runs unchanged inside the
+``shard_map`` -- and only the server aggregation crosses the slow axis.
+``server_reduce="gather"`` (default) all-gathers the per-device compressed
+updates -- exactly the traffic LGC compresses in the paper -- and reduces the
+full (M, D) matrix identically on every shard, which keeps History
+BIT-identical to the unsharded engine for any shard count (the per-device
+float math is batch-shape stable on XLA:CPU, and the counter-based
+``stream_key`` streams are indexed by *global* device id).
+``server_reduce="psum"`` crosses only the d-vector partial sums (O(d) per
+link instead of O(Md/D)) at the price of a reassociated float reduction:
+History then matches to ~1e-6, not bitwise.
 """
 from __future__ import annotations
 
 import functools
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -80,6 +97,7 @@ class BatchedEngine:
         self.n_ch = len(cfg.channels)
         self.data_x, self.data_y, self.n_dev = _stack_device_data(
             sim.task.device_data)
+        self.dev_ids = jnp.arange(self.m, dtype=jnp.int32)
         # stacked per-device state (Algorithm 1 line 1)
         self.w_hat = jax.tree_util.tree_map(
             lambda a: jnp.broadcast_to(a[None], (self.m,) + a.shape) + 0,
@@ -91,7 +109,16 @@ class BatchedEngine:
                                static_argnames=("k_cap",))
 
     # -- the one-XLA-program sync window ------------------------------------
-    def _make_window(self):
+    def _make_window(self, axis_name: str | None = None,
+                     server_reduce: str = "gather"):
+        """Build the window program.
+
+        With ``axis_name`` set the returned function is a ``shard_map`` body:
+        every (M, .) argument arrives as its local (M/D, .) block, ``dev_ids``
+        carries the *global* device indices of the block (so the counter-based
+        key streams are shard-layout independent), and the server aggregation
+        crosses the mesh axis per ``server_reduce``.
+        """
         sim, cfg = self.sim, self.sim.cfg
         loss_fn = sim.task.loss_fn
         base = sim._base
@@ -100,11 +127,10 @@ class BatchedEngine:
         bsz = cfg.batch_size
         vb, ib = cfg.value_bytes, cfg.index_bytes
         consts = stack_specs(cfg.channels)
-        marange = jnp.arange(m)
 
-        def local_round(w_hat, t, eta, valid, data_x, data_y, n_dev):
+        def local_round(w_hat, t, eta, valid, data_x, data_y, n_dev, dev_ids):
             keys = jax.vmap(lambda i: stream_key(base, TAG_BATCH, t, i))(
-                marange)
+                dev_ids)
 
             def dev(w, key, n, x, y):
                 idx = jax.random.randint(key, (bsz,), 0, n)
@@ -129,7 +155,7 @@ class BatchedEngine:
                 u, ks_mat, recv)
             return g, u - g
 
-        def window(params, w_hat, anchor, ef, data_x, data_y, n_dev,
+        def window(params, w_hat, anchor, ef, data_x, data_y, n_dev, dev_ids,
                    ts, etas, valid, sync_mask, ks_mat, *, k_cap):
             """ts/etas/valid: (L,) round indices, step sizes, padding mask
             (L is padded to a power of two so few scan programs compile);
@@ -138,12 +164,13 @@ class BatchedEngine:
             program serves sync and record-only windows alike."""
             def body(w, sc):
                 t, eta, v = sc
-                return local_round(w, t, eta, v, data_x, data_y, n_dev), None
+                return local_round(w, t, eta, v, data_x, data_y, n_dev,
+                                   dev_ids), None
             w_hat, _ = jax.lax.scan(body, w_hat, (ts, etas, valid))
 
             t_sync = ts[-1]
             ch_keys = jax.vmap(
-                lambda i: stream_key(base, TAG_CHANNEL, t_sync, i))(marange)
+                lambda i: stream_key(base, TAG_CHANNEL, t_sync, i))(dev_ids)
             ch = jax.vmap(lambda k: sample_channels_from(k, consts))(ch_keys)
             delta = anchor - jax.vmap(flatten_tree)(w_hat)   # (M, D)
 
@@ -158,7 +185,7 @@ class BatchedEngine:
                 g, ef_new = compress(ef, delta, ks_mat, recv, k_cap)
                 if mode == "lgc_q8":
                     kq = jax.vmap(lambda i: stream_key(
-                        base, TAG_QUANT, t_sync, i))(marange)
+                        base, TAG_QUANT, t_sync, i))(dev_ids)
                     q, scale = jax.vmap(qsgd_quantize)(g, kq)
                     g_deq = jax.vmap(qsgd_dequantize)(q, scale)
                     # quantization residual stays in the error memory
@@ -175,13 +202,26 @@ class BatchedEngine:
                                comm["time_s"], jnp.sum(nbytes, axis=1)], 1)
             costs = jnp.where(sync_mask[:, None], costs, 0.0)
 
-            g_sum = jnp.sum(jnp.where(sync_mask[:, None], g, 0.0), axis=0)
+            g_masked = jnp.where(sync_mask[:, None], g, 0.0)
+            if axis_name is None:
+                g_sum = jnp.sum(g_masked, axis=0)
+            elif server_reduce == "gather":
+                # the per-device compressed updates -- the traffic LGC
+                # compresses -- cross the slow axis; every shard then runs
+                # the same (M, D) reduce as the unsharded engine, keeping
+                # the server mean bit-identical for any shard count
+                g_sum = jnp.sum(jax.lax.all_gather(
+                    g_masked, axis_name, axis=0, tiled=True), axis=0)
+            else:  # "psum": O(d) per link, float reduction is reassociated
+                g_sum = jax.lax.psum(jnp.sum(g_masked, axis=0), axis_name)
             new_flat = flatten_tree(params) - g_sum / m
             new_params = unflatten_like(new_flat, params)
+            m_loc = sync_mask.shape[0]          # local block under shard_map
             # broadcast: synced devices adopt the global model
             w_hat = jax.tree_util.tree_map(
                 lambda wl, pl: jnp.where(
-                    sync_mask.reshape((m,) + (1,) * pl.ndim), pl[None], wl),
+                    sync_mask.reshape((m_loc,) + (1,) * pl.ndim), pl[None],
+                    wl),
                 w_hat, new_params)
             anchor = jnp.where(sync_mask[:, None], new_flat[None], anchor)
             ef = jnp.where(sync_mask[:, None], ef_new, ef)
@@ -213,7 +253,7 @@ class BatchedEngine:
             (sim.params, self.w_hat, self.anchor, self.ef,
              costs) = self._window(
                 sim.params, self.w_hat, self.anchor, self.ef,
-                self.data_x, self.data_y, self.n_dev,
+                self.data_x, self.data_y, self.n_dev, self.dev_ids,
                 ts, etas, valid, self._sync_mask(te), self._ks_mat(),
                 k_cap=self._k_cap())
             rec = [r for r in range(t, te)
@@ -267,3 +307,70 @@ class BatchedEngine:
             ks = (ks + [0] * self.n_ch)[: self.n_ch]
             rows.append(ks)
         return jnp.asarray(rows, jnp.int32)
+
+
+class ShardedEngine(BatchedEngine):
+    """Batched engine with the device axis partitioned over a real mesh.
+
+    The (M, .) pytrees are sharded over the mesh's FL axis
+    (:func:`repro.launch.mesh.fl_axis_name`): each of the D mesh devices owns
+    an M/D block of edge devices and runs the whole window program --
+    sync-window SGD scan, channel sampling, layered compress/EF, cost
+    accounting -- on its block, inside one :func:`repro.launch.compat.shard_map`
+    body.  Only the server aggregation crosses the slow axis (see
+    ``server_reduce`` in :meth:`BatchedEngine._make_window`); with the
+    default ``"gather"`` reduce, History is bit-identical to the unsharded
+    :class:`BatchedEngine` (tests/test_sharded.py).
+
+    Host-side control (windows, controller boundaries, History recording)
+    is exactly the base class's ``run``: only ``_window`` is replaced by a
+    per-``k_cap`` cache of jitted shard_map programs, and the stacked state
+    is pre-placed so window outputs stay sharded across window boundaries.
+    """
+
+    def __init__(self, sim, mesh=None, server_reduce: str = "gather"):
+        from repro.launch.compat import shardings
+        from repro.launch.mesh import fl_axis_name, make_host_mesh
+
+        if server_reduce not in ("gather", "psum"):
+            raise ValueError(f"unknown server_reduce: {server_reduce!r}")
+        self.mesh = mesh if mesh is not None else make_host_mesh()
+        self.axis = fl_axis_name(self.mesh)
+        self.n_shards = int(self.mesh.shape[self.axis])
+        self.server_reduce = server_reduce
+        m = sim.m_devices
+        if m % self.n_shards != 0:
+            raise ValueError(
+                f"ShardedEngine: M={m} simulated devices do not divide over "
+                f"{self.n_shards} mesh devices on axis {self.axis!r}; pick "
+                f"M a multiple of the FL axis size")
+        super().__init__(sim)
+
+        from jax.sharding import PartitionSpec as P
+        shard, rep = P(self.axis), P()
+        self._in_specs = (rep, shard, shard, shard, shard, shard, shard,
+                          shard, rep, rep, rep, shard, shard)
+        self._out_specs = (rep, shard, shard, shard, shard)
+        # pre-place the stacked state and data so every window call reuses
+        # the resident shards instead of re-scattering from host
+        place = lambda tree: jax.device_put(
+            tree, shardings(self.mesh, shard))
+        self.data_x, self.data_y = place(self.data_x), place(self.data_y)
+        self.n_dev, self.dev_ids = place(self.n_dev), place(self.dev_ids)
+        self.w_hat = place(self.w_hat)
+        self.anchor, self.ef = place(self.anchor), place(self.ef)
+        self._programs: dict[int, Callable] = {}
+        self._window = self._dispatch_window
+
+    def _dispatch_window(self, *args, k_cap: int):
+        fn = self._programs.get(k_cap)
+        if fn is None:
+            from repro.launch.compat import shard_map
+            body = functools.partial(
+                self._make_window(self.axis, self.server_reduce),
+                k_cap=k_cap)
+            fn = jax.jit(shard_map(
+                body, mesh=self.mesh, in_specs=self._in_specs,
+                out_specs=self._out_specs))
+            self._programs[k_cap] = fn
+        return fn(*args)

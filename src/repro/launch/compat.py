@@ -7,12 +7,36 @@ where those spell ``jax.make_mesh`` without axis types, the mesh
 resource-env context, and ``jax.experimental.shard_map`` with
 ``auto``/``check_rep``.  Everything here is a thin feature-detected
 dispatch -- no behaviour change on new jax.
+
+The sharded FL engine (:class:`repro.core.fl_batched.ShardedEngine`) uses
+the fully-manual :func:`shard_map` path (``axis_names=None``), which maps to
+``auto=frozenset()`` on 0.4.x -- partial-auto is never required.  CI runs a
+{pinned, latest} jax matrix so drift in these shims surfaces the day a new
+jax releases, not when the pin moves.
 """
 from __future__ import annotations
 
+import os
 from typing import Sequence
 
 import jax
+
+
+def force_host_device_count(n: int) -> None:
+    """Make the CPU backend expose ``n`` virtual devices (a host mesh).
+
+    Rewrites ``XLA_FLAGS`` with ``--xla_force_host_platform_device_count=n``;
+    any pre-existing occurrence of the flag is dropped first, because XLA
+    honours the LAST occurrence -- naively prepending would let an inherited
+    environment value (e.g. the test-sharded CI lane's =8) silently win.
+    Must run before the first jax backend initialisation in the process,
+    which is why the mesh-scaling bench workers apply it in a fresh
+    subprocess per device count.
+    """
+    kept = [f for f in os.environ.get("XLA_FLAGS", "").split()
+            if not f.startswith("--xla_force_host_platform_device_count=")]
+    os.environ["XLA_FLAGS"] = " ".join(
+        kept + [f"--xla_force_host_platform_device_count={n}"])
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> "jax.sharding.Mesh":

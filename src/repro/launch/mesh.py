@@ -29,7 +29,11 @@ def make_host_mesh(n_devices: int | None = None, model: int = 1
     """Small mesh over the actually-present (host) devices, for examples
     and integration tests."""
     n = n_devices or len(jax.devices())
-    assert n % model == 0
+    if model < 1 or n % model != 0:
+        raise ValueError(
+            f"make_host_mesh: {n} devices do not factor into a "
+            f"(data={n}/{model}, model={model}) mesh; n_devices must be a "
+            f"positive multiple of model")
     return make_mesh((n // model, model), ("data", "model"))
 
 

@@ -9,7 +9,10 @@ from repro.core import (FLConfig, FixedController, FleetDDPG, LGCSimulator,
                         run_baseline, theorem1_bound, tree_size)
 from repro.core.controller import (DDPGConfig, DDPGController, ReplayBuffer,
                                    decode_actions)
+from repro.core.fl import TAG_REWARD
 from repro.models.paper_models import make_mnist_task, make_shakespeare_task
+
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
 
 
 @pytest.fixture(scope="module")
@@ -109,6 +112,19 @@ class TestEngineEquivalence:
     def test_batched_is_default_engine(self):
         assert FLConfig().engine == "batched"
 
+    def test_sharded_matches_batched(self):
+        """engine="sharded" (shard_map over the host mesh's FL axis, gather
+        server reduce) reproduces the unsharded batched engine's History
+        BIT-identically -- on however many host devices are present (the
+        test-sharded CI lane forces an 8-way host mesh; the plain lane runs
+        the same check on a 1-way mesh).  M=8 divides every power-of-two
+        shard count."""
+        task = make_mnist_task("lr", m_devices=8, n_train=2000)
+        cfg = FLConfig(rounds=30, eval_every=10)
+        h_bat = run_baseline(task, cfg, "lgc", h=4, engine="batched")
+        h_sh = run_baseline(task, cfg, "lgc", h=4, engine="sharded")
+        assert h_sh.asdict() == h_bat.asdict()
+
     @pytest.mark.parametrize("engine", ["loop", "batched"])
     def test_fleet_matches_agent_list(self, lr_task, engine):
         """FleetDDPG(M) and the legacy per-device agent list (through the
@@ -159,6 +175,36 @@ class TestEngineEquivalence:
         # a single probe state broadcasts to all 32 learned policies
         hs, kss = fleet.allocation(np.array([1e3, 0.01, 10, 1], np.float32))
         assert hs.shape == (32,) and kss.shape == (32, 3)
+
+
+class TestBatchedRewardEval:
+    """The batched TAG_REWARD eval (one jitted lax.map program per sync
+    boundary, rows padded to a power of two) must match the old per-device
+    ``_eval_subset(TAG_REWARD, (t, m), 512)`` host loop bit-for-bit, for any
+    subset of devices and any round -- it feeds the DDPG reward, where ulp
+    drift would desynchronize the fleet-vs-list bit-identity invariant."""
+
+    _sim = None
+
+    @classmethod
+    def sim(cls):
+        # cached plain helper, not a pytest fixture: @given composes with
+        # both real hypothesis and the offline fallback shim this way
+        if cls._sim is None:
+            task = make_mnist_task("lr", m_devices=6, n_train=1500)
+            ctrls = [FixedController(4, [200, 300, 400]) for _ in range(6)]
+            cls._sim = LGCSimulator(task, FLConfig(rounds=10), ctrls,
+                                    mode="lgc")
+        return cls._sim
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 63), st.integers(0, 10_000))
+    def test_matches_per_device_loop(self, subset_bits, t):
+        sim = self.sim()
+        ms = [m for m in range(6) if subset_bits & (1 << m)]
+        batched = sim._reward_losses(ms, t)
+        reference = [sim._eval_subset(TAG_REWARD, (t, m), 512)[0] for m in ms]
+        assert batched == reference          # float equality, bit-for-bit
 
 
 class TestTheoremBounds:
