@@ -1,0 +1,94 @@
+"""Scenario zoo sweep: accuracy-vs-cost of fixed vs DDPG control across the
+named-scenario registry (repro.core.scenario.SCENARIOS).
+
+The paper's premise is that learned control pays off when the environment is
+*dynamic*; the seed benchmarks only ever ran the memoryless "static" model.
+This bench runs every registry scenario -- Gauss-Markov bandwidth,
+Gilbert-Elliott burst availability, flaky/straggler devices, Dirichlet data
+skew -- under (a) the fixed LGC controller and (b) a DDPG fleet, on the
+batched engine, and records final accuracy next to the resource spend
+(energy / money / wall time / uplink).  Rows land in ``BENCH_scenarios.json``
+via ``benchmarks/run.py`` (CI uploads it as artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.core import (SCENARIOS, FLConfig, FleetDDPG, LGCSimulator,
+                        run_baseline, tree_size)
+from repro.core.controller import DDPGConfig
+from repro.models.paper_models import make_mnist_task
+
+from .common import emit
+
+
+def _row(scenario: str, controller: str, hist, wall: float, m: int,
+         rounds: int, **extra) -> dict:
+    return {
+        "scenario": scenario, "controller": controller, "m_devices": m,
+        "rounds": rounds, "wall_s": round(wall, 3),
+        "final_loss": round(hist.loss[-1], 4),
+        "final_accuracy": round(hist.accuracy[-1], 4),
+        "energy_j": round(hist.energy_j[-1], 2),
+        "money": round(hist.money[-1], 4),
+        "time_s": round(hist.time_s[-1], 2),
+        "uplink_mb": round(hist.uplink_mb[-1], 4),
+        **extra,
+    }
+
+
+def run(scenarios=None, m: int = 8, rounds: int = 60, n_train: int = 2000,
+        emit_csv: bool = True) -> dict:
+    names = list(scenarios or SCENARIOS)
+    rows = []
+    for name in names:
+        task = make_mnist_task("lr", m_devices=m, n_train=n_train,
+                               scenario=name)
+        cfg = FLConfig(rounds=rounds, eval_every=max(rounds // 4, 1),
+                       scenario=name)
+        t0 = time.time()
+        h_fix = run_baseline(task, cfg, "lgc", h=4, engine="batched")
+        rows.append(_row(name, "fixed", h_fix, time.time() - t0, m, rounds))
+        d = tree_size(task.init(jax.random.PRNGKey(0)))
+        # batch_size=4 so the replay buffer warms within the bench budget
+        # (a device inserts one transition per sync; the default batch of 64
+        # would leave the fleet untrained and benchmark exploration noise)
+        fleet = FleetDDPG(m, DDPGConfig(
+            k_total_max=max(3, int(d * 0.05)), batch_size=4, seed=0))
+        t0 = time.time()
+        h_drl = LGCSimulator(task, cfg, fleet, mode="lgc",
+                             engine="batched").run()
+        train_steps = int(fleet._n_train.sum())
+        assert train_steps > 0, f"DDPG never trained on {name}; raise rounds"
+        rows.append(_row(name, "ddpg", h_drl, time.time() - t0, m, rounds,
+                         ddpg_train_steps=train_steps))
+        if emit_csv:
+            emit(f"scenario_{name}",
+                 (rows[-2]["wall_s"] + rows[-1]["wall_s"]) * 1e6 / rounds,
+                 f"fixed_acc={rows[-2]['final_accuracy']};"
+                 f"ddpg_acc={rows[-1]['final_accuracy']};"
+                 f"fixed_energy={rows[-2]['energy_j']};"
+                 f"ddpg_energy={rows[-1]['energy_j']}")
+    return {"m_devices": m, "rounds": rounds, "rows": rows}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--m", type=int, default=8)
+    ap.add_argument("--scenarios", default=None,
+                    help="comma-separated registry names (default: all)")
+    ap.add_argument("--out", default="BENCH_scenarios.json")
+    args = ap.parse_args()
+    names = args.scenarios.split(",") if args.scenarios else None
+    res = run(scenarios=names, m=args.m, rounds=args.rounds)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

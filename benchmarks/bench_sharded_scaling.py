@@ -60,14 +60,14 @@ def _steady_window_rate(sim, eng, m: int, h: int, k_windows: int):
                            eng.dev_ids, ts, etas, valid, sync, ks_mat,
                            k_cap=k_cap)
 
-    state = (sim.params, eng.w_hat, eng.anchor, eng.ef)
+    state = (sim.params, eng.w_hat, eng.anchor, eng.ef, eng.scen_carry)
     out = win(state, 0)
     jax.block_until_ready(out)                     # compile + first window
-    state = out[:4]
+    state = out[:5]
     t0w, t0c = time.time(), os.times()
     for i in range(1, k_windows + 1):
         out = win(state, i)
-        state = out[:4]
+        state = out[:5]
     jax.block_until_ready(out)
     wall = time.time() - t0w
     tc = os.times()

@@ -8,6 +8,9 @@ from .channels import (DEFAULT_CHANNELS, ChannelSpec, DeviceProfile,
                        comm_cost, comp_cost, sample_channels)
 from .fl import (ControllerFleet, FLConfig, FLTask, FixedController, History,
                  LGCSimulator, RoundDecision, run_baseline)
+from .scenario import (SCENARIOS, DropoutSpec, GaussMarkovSpec,
+                       GilbertElliottSpec, Scenario, StragglerSpec,
+                       get_scenario)
 from .controller import (DDPGConfig, DDPGController, FleetDDPG,
                          make_ddpg_controllers, make_fleet_ddpg)
 from .convergence import ProblemConstants, corollary1_rate, theorem1_bound
@@ -21,6 +24,8 @@ __all__ = [
     "comp_cost", "sample_channels",
     "ControllerFleet", "FLConfig", "FLTask", "FixedController", "History",
     "LGCSimulator", "RoundDecision", "run_baseline",
+    "SCENARIOS", "DropoutSpec", "GaussMarkovSpec", "GilbertElliottSpec",
+    "Scenario", "StragglerSpec", "get_scenario",
     "DDPGConfig", "DDPGController", "FleetDDPG",
     "make_ddpg_controllers", "make_fleet_ddpg",
     "ProblemConstants", "corollary1_rate", "theorem1_bound",

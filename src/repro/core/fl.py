@@ -34,7 +34,13 @@ Both engines draw every random variate from the same counter-based key
 scheme (:func:`stream_key`), so for a fixed seed they simulate the *same*
 trajectory: identical minibatches, channel realisations and eval subsets.
 The engines therefore agree on History up to float reduction order
-(tests/test_fl.py::TestEngineEquivalence).
+(tests/test_fl.py::TestEngineEquivalence).  Environment dynamics beyond the
+memoryless seed model -- Gauss-Markov bandwidth, Gilbert-Elliott burst
+availability, device dropout/stragglers -- come from
+:mod:`repro.core.scenario` via ``FLConfig.scenario``; the per-device chain
+carry is advanced once per simulated round by every engine from the same
+TAG_SCEN stream, so the equivalence invariant extends to every scenario
+(tests/test_scenarios.py).
 
 The simulator accounts energy / money / wall-time per round using the
 multi-channel model in :mod:`repro.core.channels` and supports the paper's
@@ -54,36 +60,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from .channels import (DEFAULT_CHANNELS, ChannelSpec, DeviceProfile,
-                       comm_cost, comp_cost, sample_channels)
+                       comm_cost, comp_cost, stack_specs)
 from .compressor import (LGCCompressor, flatten_tree, tree_size,
                          unflatten_like, wire_bytes)
 from .error_feedback import EFState, ef_compress
+# counter-based randomness and environment dynamics live one layer below, in
+# repro.core.scenario; the tags and stream_key are re-exported here because
+# every engine/controller/test imports them from this module
+from .scenario import (TAG_BATCH, TAG_CHANNEL, TAG_CTRL_NOISE,  # noqa: F401
+                       TAG_CTRL_SAMPLE, TAG_DROP, TAG_EVAL, TAG_QUANT,
+                       TAG_REWARD, TAG_SCEN, TAG_SCEN_INIT, Scenario,
+                       dropout_mask, get_scenario, init_carry,
+                       sample_from_carry, step_carry, stream_key)
 
 Array = jax.Array
-
-
-# ---------------------------------------------------------------------------
-# counter-based randomness, shared by both engines
-# ---------------------------------------------------------------------------
-
-# stream tags: minibatch draws, channel realisations, eval subsets,
-# controller-reward eval subsets, QSGD dither, controller exploration noise,
-# controller replay sampling
-(TAG_BATCH, TAG_CHANNEL, TAG_EVAL, TAG_REWARD, TAG_QUANT,
- TAG_CTRL_NOISE, TAG_CTRL_SAMPLE) = range(7)
-
-
-def stream_key(base: Array, tag: int, *ids) -> Array:
-    """Derive the PRNG key for one (stream, round, device) event.
-
-    Counter-based (``fold_in`` of static tags + indices) instead of a split
-    chain, so the loop engine (sequential consumption) and the batched engine
-    (vmapped consumption inside a scan) draw bit-identical variates.
-    """
-    k = jax.random.fold_in(base, tag)
-    for i in ids:
-        k = jax.random.fold_in(k, i)
-    return k
 
 
 # ---------------------------------------------------------------------------
@@ -116,6 +106,10 @@ class FLConfig:
     index_bytes: int = 4
     engine: str = "batched"            # "batched" | "loop" | "sharded"
     backend: str = "exact"             # "exact" | "pallas"
+    # environment dynamics: a repro.core.scenario.Scenario or a registry name
+    # ("static", "markov_urban", "gilbert_flaky", ...); "static" reproduces
+    # the memoryless seed model exactly
+    scenario: str | Scenario = "static"
 
 
 @dataclasses.dataclass
@@ -248,7 +242,9 @@ class LGCSimulator:
         key = jax.random.PRNGKey(cfg.seed)
         self.params = task.init(key)                 # global model  w_global
         self.d = tree_size(self.params)
-        profiles = cfg.device_profiles or [DeviceProfile()] * self.m_devices
+        self.scenario = get_scenario(cfg.scenario)
+        profiles = (list(cfg.device_profiles) if cfg.device_profiles
+                    else self.scenario.device_profiles(self.m_devices))
         self.profiles = profiles
 
         # per-device state (Algorithm 1 line 1)
@@ -268,6 +264,22 @@ class LGCSimulator:
         self._base = jax.random.PRNGKey(cfg.seed + 1)   # event-key base
         self._reward_eval = jax.jit(self._make_reward_eval())
         self._eval_xy = None            # eval data as jnp arrays, lazily
+
+        # scenario state: per-device channel-chain carries, stacked (M, C).
+        # Stationary-initialized from the TAG_SCEN_INIT stream; advanced one
+        # step per simulated round by whichever engine runs (the batched
+        # engine threads this carry through its window scan, the loop engine
+        # advances it with one vmapped jitted call per round).
+        self._dev_ids = jnp.arange(self.m_devices, dtype=jnp.int32)
+        self._consts = stack_specs(cfg.channels)
+        scn, base, n_ch = self.scenario, self._base, len(cfg.channels)
+        self.scen_carry = jax.vmap(
+            lambda i: init_carry(scn, base, i, n_ch))(self._dev_ids)
+        self._scen_step_all = jax.jit(
+            lambda carry, t: jax.vmap(
+                lambda c, i: step_carry(scn, base, c, t, i,
+                                        jnp.bool_(True)))(carry,
+                                                          self._dev_ids))
 
     # -- jitted pieces ------------------------------------------------------
     def _make_sgd_step(self):
@@ -382,6 +394,11 @@ class LGCSimulator:
         cfg = self.cfg
         self._decide_devices(range(self.m_devices), 0)
         for t in range(cfg.rounds):
+            if not self.scenario.is_static:
+                # channels evolve every round, synced or not (same order as
+                # the batched engine's window scan)
+                self.scen_carry = self._scen_step_all(self.scen_carry,
+                                                      jnp.int32(t))
             eta = self._eta(t)
             updates, sync_ms = [], []
             for m in range(self.m_devices):
@@ -423,7 +440,15 @@ class LGCSimulator:
     def _sync_device(self, m: int, t: int):
         dec = self.decisions[m]
         k_ch = stream_key(self._base, TAG_CHANNEL, t, m)
-        ch = sample_channels(k_ch, self.cfg.channels)
+        carry_m = jax.tree_util.tree_map(lambda a: a[m], self.scen_carry)
+        ch = sample_from_carry(self.scenario, self._consts, carry_m, k_ch)
+        if self.scenario.has_dropout:
+            # dropped sync: the whole uplink is lost (EF keeps the mass),
+            # the downlink broadcast below still reaches the device; same
+            # dropout_mask the batched engine applies, on this device's row
+            drop = dropout_mask(self.scenario, self._base, t,
+                                self._dev_ids[m:m + 1])[0]
+            ch = ch._replace(up=ch.up & ~drop)
         delta = self.w_anchor[m] - flatten_tree(self.w_hat[m])  # w_m - w_hat^{t+1/2}
 
         if self.mode == "lgc_q8":
@@ -444,12 +469,15 @@ class LGCSimulator:
             nbytes = [b if r else 0 for b, r in zip(nbytes, received)]
             cost = comm_cost(ch, nbytes)
         elif self.mode == "fedavg":
-            g = delta  # dense, no error feedback
-            # full model over the single fastest *up* channel
+            # dense, no error feedback; full model over the single fastest
+            # *up* channel -- with every channel down the upload is lost
+            # (no bytes, no update; FedAvg carries nothing over)
+            any_up = bool(np.asarray(ch.up).any())
+            g = jnp.where(any_up, delta, 0.0)
             bw = np.asarray(ch.bandwidth_mb_s) * np.asarray(ch.up)
             best = int(np.argmax(bw))
             nbytes = [0] * len(self.cfg.channels)
-            nbytes[best] = self.d * self.cfg.value_bytes
+            nbytes[best] = self.d * self.cfg.value_bytes if any_up else 0
             cost = comm_cost(ch, nbytes)
         else:
             if self.mode == "topk":

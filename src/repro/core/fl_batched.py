@@ -27,6 +27,12 @@ Randomness uses the counter-based :func:`repro.core.fl.stream_key` scheme,
 shared with the loop engine, so both engines simulate bit-identical
 minibatches / channels / eval subsets and their History agrees to float
 reduction order (verified in tests/test_fl.py::TestEngineEquivalence).
+Scenario dynamics (:mod:`repro.core.scenario`) ride the same scheme: the
+per-device Gauss-Markov / Gilbert-Elliott chain carry is part of the scanned
+window state, advanced once per valid round from the TAG_SCEN stream, and
+the realized :class:`~repro.core.channels.ChannelSample` at the sync round
+reads the carry instead of fresh IID draws -- so every registry scenario
+inherits the engine-equivalence invariant (tests/test_scenarios.py).
 
 ``backend="pallas"`` routes the per-device EF hot path through the fused
 Pallas kernel pipeline (:func:`repro.kernels.lgc_compress_hist`: maxabs +
@@ -59,10 +65,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .channels import comm_cost_mb, comp_cost, sample_channels_from, stack_specs
+from .channels import comm_cost_mb, comp_cost, stack_specs
 from .compressor import (flatten_tree, lgc_compress_topk, qsgd_dequantize,
                          qsgd_quantize, unflatten_like)
 from .fl import (TAG_BATCH, TAG_CHANNEL, TAG_QUANT, History, stream_key)
+from .scenario import dropout_mask, sample_from_carry, step_carry
 
 Array = jax.Array
 
@@ -105,6 +112,10 @@ class BatchedEngine:
         flat0 = flatten_tree(sim.params)
         self.anchor = jnp.broadcast_to(flat0[None], (self.m, self.d)) + 0
         self.ef = jnp.zeros((self.m, self.d), jnp.float32)
+        # per-device scenario chain carry, stacked (M, C) -- initialized by
+        # the simulator (same stationary TAG_SCEN_INIT draw the loop engine
+        # starts from), advanced inside the window scan below
+        self.scen_carry = sim.scen_carry
         self._window = jax.jit(self._make_window(),
                                static_argnames=("k_cap",))
 
@@ -127,6 +138,7 @@ class BatchedEngine:
         bsz = cfg.batch_size
         vb, ib = cfg.value_bytes, cfg.index_bytes
         consts = stack_specs(cfg.channels)
+        scn = sim.scenario
 
         def local_round(w_hat, t, eta, valid, data_x, data_y, n_dev, dev_ids):
             keys = jax.vmap(lambda i: stream_key(base, TAG_BATCH, t, i))(
@@ -155,31 +167,55 @@ class BatchedEngine:
                 u, ks_mat, recv)
             return g, u - g
 
-        def window(params, w_hat, anchor, ef, data_x, data_y, n_dev, dev_ids,
-                   ts, etas, valid, sync_mask, ks_mat, *, k_cap):
+        def window(params, w_hat, anchor, ef, scen_carry, data_x, data_y,
+                   n_dev, dev_ids, ts, etas, valid, sync_mask, ks_mat, *,
+                   k_cap):
             """ts/etas/valid: (L,) round indices, step sizes, padding mask
             (L is padded to a power of two so few scan programs compile);
-            ks_mat: (M, C).  A window with an all-false sync_mask degrades
+            ks_mat: (M, C); scen_carry: (M, .) scenario chain state, advanced
+            one step per valid scanned round (padded steps leave it bitwise
+            untouched).  A window with an all-false sync_mask degrades
             to a bitwise no-op on params/anchor/ef with zero costs, so one
             program serves sync and record-only windows alike."""
-            def body(w, sc):
+            def body(state, sc):
+                w, carry = state
                 t, eta, v = sc
-                return local_round(w, t, eta, v, data_x, data_y, n_dev,
-                                   dev_ids), None
-            w_hat, _ = jax.lax.scan(body, w_hat, (ts, etas, valid))
+                w = local_round(w, t, eta, v, data_x, data_y, n_dev, dev_ids)
+                carry = jax.vmap(
+                    lambda c, i: step_carry(scn, base, c, t, i, v))(
+                    carry, dev_ids)
+                return (w, carry), None
+            (w_hat, scen_carry), _ = jax.lax.scan(
+                body, (w_hat, scen_carry), (ts, etas, valid))
 
             t_sync = ts[-1]
             ch_keys = jax.vmap(
                 lambda i: stream_key(base, TAG_CHANNEL, t_sync, i))(dev_ids)
-            ch = jax.vmap(lambda k: sample_channels_from(k, consts))(ch_keys)
+            ch = jax.vmap(lambda c, k: sample_from_carry(scn, consts, c, k))(
+                scen_carry, ch_keys)
+            if scn.has_dropout:
+                drop = dropout_mask(scn, base, t_sync, dev_ids)
+                ch = ch._replace(up=ch.up & ~drop[:, None])
             delta = anchor - jax.vmap(flatten_tree)(w_hat)   # (M, D)
 
             if mode == "fedavg":
-                g, ef_new = delta, ef                 # dense, no error feedback
+                # dense, no error feedback; with every channel down (burst
+                # outage / dropout) the upload is simply lost -- no bytes,
+                # no update, and nothing carried over (FedAvg has no EF).
+                # The outage mask is applied as exact where-selects AFTER
+                # the unchanged cost expressions: weaving it into the float
+                # chain (e.g. nbytes * any_up) lets XLA:CPU pick batch-
+                # shape-dependent FMA fusions and breaks the sharded
+                # bit-identity on the cost fields by ulps.
+                any_up = jnp.any(ch.up, axis=1)
+                g = jnp.where(any_up[:, None], delta, 0.0)
+                ef_new = ef
                 bw = ch.bandwidth_mb_s * ch.up
                 best = jnp.argmax(bw, axis=1)
                 nbytes = (jax.nn.one_hot(best, n_ch, dtype=jnp.float32)
                           * (d * vb))
+                uplink_bytes = jnp.where(any_up, jnp.sum(nbytes, axis=1),
+                                         0.0)
             else:
                 recv = ch.up[:, :n_ch]
                 g, ef_new = compress(ef, delta, ks_mat, recv, k_cap)
@@ -194,12 +230,13 @@ class BatchedEngine:
                 vbytes = 1 if mode == "lgc_q8" else vb
                 nbytes = (ks_mat.astype(jnp.float32) * (vbytes + ib)
                           * recv.astype(jnp.float32))
+                uplink_bytes = jnp.sum(nbytes, axis=1)
 
             comm = comm_cost_mb(ch, nbytes / 1e6)            # dict of (M,)
             # byte counts are integer-valued (exact in f32 below 2^24), so the
             # host-side f64 accumulation matches the loop engine bitwise
             costs = jnp.stack([comm["energy_j"], comm["money"],
-                               comm["time_s"], jnp.sum(nbytes, axis=1)], 1)
+                               comm["time_s"], uplink_bytes], 1)
             costs = jnp.where(sync_mask[:, None], costs, 0.0)
 
             g_masked = jnp.where(sync_mask[:, None], g, 0.0)
@@ -225,7 +262,7 @@ class BatchedEngine:
                 w_hat, new_params)
             anchor = jnp.where(sync_mask[:, None], new_flat[None], anchor)
             ef = jnp.where(sync_mask[:, None], ef_new, ef)
-            return new_params, w_hat, anchor, ef, costs
+            return new_params, w_hat, anchor, ef, scen_carry, costs
 
         return window
 
@@ -250,12 +287,12 @@ class BatchedEngine:
                 jnp.float32)
             valid = jnp.asarray([True] * length + [False] * pad)
             params_before = sim.params
-            (sim.params, self.w_hat, self.anchor, self.ef,
+            (sim.params, self.w_hat, self.anchor, self.ef, self.scen_carry,
              costs) = self._window(
                 sim.params, self.w_hat, self.anchor, self.ef,
-                self.data_x, self.data_y, self.n_dev, self.dev_ids,
-                ts, etas, valid, self._sync_mask(te), self._ks_mat(),
-                k_cap=self._k_cap())
+                self.scen_carry, self.data_x, self.data_y, self.n_dev,
+                self.dev_ids, ts, etas, valid, self._sync_mask(te),
+                self._ks_mat(), k_cap=self._k_cap())
             rec = [r for r in range(t, te)
                    if r % cfg.eval_every == 0 or r == cfg.rounds - 1]
             if rec and rec[-1] == te - 1:
@@ -348,9 +385,11 @@ class ShardedEngine(BatchedEngine):
 
         from jax.sharding import PartitionSpec as P
         shard, rep = P(self.axis), P()
+        # args: params, w_hat, anchor, ef, scen_carry, data_x, data_y,
+        #       n_dev, dev_ids, ts, etas, valid, sync_mask, ks_mat
         self._in_specs = (rep, shard, shard, shard, shard, shard, shard,
-                          shard, rep, rep, rep, shard, shard)
-        self._out_specs = (rep, shard, shard, shard, shard)
+                          shard, shard, rep, rep, rep, shard, shard)
+        self._out_specs = (rep, shard, shard, shard, shard, shard)
         # pre-place the stacked state and data so every window call reuses
         # the resident shards instead of re-scattering from host
         place = lambda tree: jax.device_put(
@@ -359,6 +398,7 @@ class ShardedEngine(BatchedEngine):
         self.n_dev, self.dev_ids = place(self.n_dev), place(self.dev_ids)
         self.w_hat = place(self.w_hat)
         self.anchor, self.ef = place(self.anchor), place(self.ef)
+        self.scen_carry = place(self.scen_carry)
         self._programs: dict[int, Callable] = {}
         self._window = self._dispatch_window
 

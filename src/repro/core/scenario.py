@@ -1,0 +1,334 @@
+"""Dynamic-environment scenarios: time-correlated channels, heterogeneous
+data, device dropout/stragglers (the paper's "highly dynamic" edge network).
+
+The seed channel model (:mod:`repro.core.channels`) is memoryless: per-round
+lognormal bandwidth jitter and IID Bernoulli availability.  A DDPG controller
+benchmarked on it has no temporal structure to exploit.  This module bundles
+the *dynamics* of a simulation into a :class:`Scenario`:
+
+* **Gauss-Markov bandwidth** -- the log-bandwidth deviation x_c of every
+  channel follows a stationary AR(1) chain
+
+      x_{t+1} = rho * x_t + sigma * sqrt(1 - rho^2) * n_t,   n_t ~ N(0, 1)
+
+  with stationary distribution N(0, sigma^2).  The realized bandwidth is
+  ``nominal * exp(x_t - sigma^2/2)``, whose long-run mean is exactly the
+  spec's nominal rate (the -sigma^2/2 cancels the lognormal mean shift) --
+  pinned by the stationarity test in tests/test_scenarios.py.
+
+* **Gilbert-Elliott availability** -- each channel is a two-state (good/bad)
+  Markov chain: P(good->bad) = p_gb, P(bad->good) = p_bg; the channel is up
+  iff it is in the good state.  Stationary availability is
+  ``p_bg / (p_gb + p_bg)``.  Burst losses (consecutive bad rounds last
+  1/p_bg rounds in expectation) are what layered coding + error feedback
+  degrade gracefully under.
+
+* **Dropout / stragglers** -- per-device profiles: a dropped device's sync
+  round loses its ENTIRE uplink (all layers down; the error-feedback residual
+  carries the undelivered mass to the next sync) while the downlink broadcast
+  still reaches it; stragglers pay a compute-time multiplier in the cost
+  model.
+
+Both chains are pure ``(carry, key) -> (carry, ...)`` functions driven by the
+counter-based :func:`stream_key` scheme (which lives here so the scenario
+layer sits below :mod:`repro.core.fl`): the loop engine advances one vmapped
+step per round, the batched engine threads the carry through its window scan,
+and the sharded engine shards the (M, C) carry over the mesh -- all three
+consume identical variates, so the loop==batched==sharded equivalence
+invariant extends to every scenario (tests/test_scenarios.py).
+
+``FLConfig.scenario`` accepts a :class:`Scenario` or a registry name --
+see :data:`SCENARIOS` ("static", "markov_urban", "gilbert_flaky", ...).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .channels import (ChannelConstants, ChannelSample, DeviceProfile,
+                       sample_channels_from)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# counter-based randomness, shared by all engines (moved here from fl.py so
+# the scenario layer has no circular dependency; fl.py re-exports)
+# ---------------------------------------------------------------------------
+
+# stream tags: minibatch draws, channel realisations, eval subsets,
+# controller-reward eval subsets, QSGD dither, controller exploration noise,
+# controller replay sampling, scenario chain transitions, scenario chain
+# stationary init, sync-round device dropout
+(TAG_BATCH, TAG_CHANNEL, TAG_EVAL, TAG_REWARD, TAG_QUANT,
+ TAG_CTRL_NOISE, TAG_CTRL_SAMPLE, TAG_SCEN, TAG_SCEN_INIT,
+ TAG_DROP) = range(10)
+
+
+def stream_key(base: Array, tag: int, *ids) -> Array:
+    """Derive the PRNG key for one (stream, round, device) event.
+
+    Counter-based (``fold_in`` of static tags + indices) instead of a split
+    chain, so the loop engine (sequential consumption) and the batched engine
+    (vmapped consumption inside a scan) draw bit-identical variates.
+    """
+    k = jax.random.fold_in(base, tag)
+    for i in ids:
+        k = jax.random.fold_in(k, i)
+    return k
+
+
+# ---------------------------------------------------------------------------
+# dynamics specs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GaussMarkovSpec:
+    """AR(1) log-bandwidth evolution (replaces the IID lognormal jitter)."""
+    rho: float = 0.95       # per-round memory; 0 degenerates to IID
+    sigma: float = 0.4      # stationary std of the log-bandwidth deviation
+
+
+@dataclasses.dataclass(frozen=True)
+class GilbertElliottSpec:
+    """Two-state good/bad chain (replaces IID Bernoulli availability)."""
+    p_gb: float = 0.05      # P(good -> bad) per round
+    p_bg: float = 0.4       # P(bad -> good) per round
+
+    @property
+    def stationary_availability(self) -> float:
+        return self.p_bg / (self.p_gb + self.p_bg)
+
+
+@dataclasses.dataclass(frozen=True)
+class DropoutSpec:
+    """Per-device sync-round dropout: the whole uplink is lost, the EF
+    residual carries the undelivered mass, the downlink still arrives."""
+    base_prob: float = 0.0      # every device's per-sync drop probability
+    flaky_every: int = 0        # every k-th device is flaky (0 = none)
+    flaky_prob: float = 0.0     # drop probability of the flaky devices
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerSpec:
+    """Every k-th device computes ``slowdown``x slower (wall-clock cost)."""
+    slow_every: int = 0
+    slowdown: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """Bundle of channel dynamics, data heterogeneity and device dynamics.
+
+    ``gauss_markov`` / ``gilbert_elliott`` being None keeps the seed model's
+    memoryless bandwidth jitter / Bernoulli availability for that component;
+    a fully-None scenario ("static") reproduces the seed behaviour exactly.
+    ``partition``/``alpha`` describe how task factories should shard data
+    (see :func:`repro.models.paper_models.make_mnist_task`); the engines
+    themselves never look at them.
+    """
+    name: str = "static"
+    gauss_markov: GaussMarkovSpec | None = None
+    gilbert_elliott: GilbertElliottSpec | None = None
+    dropout: DropoutSpec | None = None
+    straggler: StragglerSpec | None = None
+    partition: str = "iid"          # "iid" | "noniid" | "dirichlet" | "quantity"
+    alpha: float = 0.5              # Dirichlet concentration (data skew)
+
+    @property
+    def is_static(self) -> bool:
+        """True when per-round carry advancement is a no-op."""
+        return self.gauss_markov is None and self.gilbert_elliott is None
+
+    @property
+    def has_dropout(self) -> bool:
+        d = self.dropout
+        return d is not None and (d.base_prob > 0 or
+                                  (d.flaky_every > 0 and d.flaky_prob > 0))
+
+    def device_profiles(self, m: int) -> list[DeviceProfile]:
+        """Per-device compute profiles with the straggler slowdown applied."""
+        base = DeviceProfile()
+        s = self.straggler
+        if s is None or s.slow_every <= 0 or s.slowdown == 1.0:
+            return [base] * m
+        slow = DeviceProfile(
+            name=f"{base.name}-straggler",
+            comp_j_per_step=base.comp_j_per_step * s.slowdown,
+            comp_time_per_step_s=base.comp_time_per_step_s * s.slowdown)
+        return [slow if i % s.slow_every == 0 else base for i in range(m)]
+
+    def drop_probs(self, dev_ids: Array) -> Array:
+        """(M,) per-device sync-dropout probabilities from *global* device
+        ids (shard-layout independent)."""
+        d = self.dropout or DropoutSpec()
+        p = jnp.full(dev_ids.shape, d.base_prob, jnp.float32)
+        if d.flaky_every > 0:
+            p = jnp.where(dev_ids % d.flaky_every == 0, d.flaky_prob, p)
+        return p
+
+
+class ScenarioCarry(NamedTuple):
+    """Per-device chain state threaded through the engines.
+
+    Shapes are per device: stacked to (M, C) by the engines, sharded to
+    (M/D, C) blocks by :class:`~repro.core.fl_batched.ShardedEngine`.  For
+    static components the fields are carried but never read (XLA dead-code
+    eliminates them inside the window program).
+    """
+    bw_log: Array       # (C,) f32  AR(1) log-bandwidth deviation
+    good: Array         # (C,) bool Gilbert-Elliott state (True = good)
+
+
+def init_carry(scn: Scenario, base: Array, dev_id: Array,
+               n_channels: int) -> ScenarioCarry:
+    """Stationary-draw initial chain state for one device (TAG_SCEN_INIT)."""
+    k = stream_key(base, TAG_SCEN_INIT, dev_id)
+    k_gm, k_ge = jax.random.split(k)
+    gm, ge = scn.gauss_markov, scn.gilbert_elliott
+    if gm is not None:
+        bw_log = gm.sigma * jax.random.normal(k_gm, (n_channels,))
+    else:
+        bw_log = jnp.zeros((n_channels,), jnp.float32)
+    if ge is not None:
+        good = (jax.random.uniform(k_ge, (n_channels,))
+                < ge.stationary_availability)
+    else:
+        good = jnp.ones((n_channels,), bool)
+    return ScenarioCarry(bw_log.astype(jnp.float32), good)
+
+
+def step_carry(scn: Scenario, base: Array, carry: ScenarioCarry, t: Array,
+               dev_id: Array, valid: Array) -> ScenarioCarry:
+    """Advance one device's chains through round ``t`` (TAG_SCEN stream).
+
+    ``valid`` masks padded scan rounds: invalid steps leave the carry
+    bitwise untouched, so the batched engine's power-of-two window padding
+    cannot desynchronize the chains from the loop engine.
+    """
+    if scn.is_static:
+        return carry
+    k = stream_key(base, TAG_SCEN, t, dev_id)
+    k_gm, k_ge = jax.random.split(k)
+    bw_log, good = carry
+    gm, ge = scn.gauss_markov, scn.gilbert_elliott
+    if gm is not None:
+        innov = gm.sigma * jnp.sqrt(1.0 - gm.rho ** 2) * \
+            jax.random.normal(k_gm, bw_log.shape)
+        bw_log = jnp.where(valid, gm.rho * bw_log + innov, bw_log)
+    if ge is not None:
+        u = jax.random.uniform(k_ge, good.shape)
+        good = jnp.where(valid,
+                         jnp.where(good, u >= ge.p_gb, u < ge.p_bg), good)
+    return ScenarioCarry(bw_log, good)
+
+
+def sample_from_carry(scn: Scenario, consts: ChannelConstants,
+                      carry: ScenarioCarry, key: Array) -> ChannelSample:
+    """Realise one device's channel conditions at a sync round.
+
+    Delegates to :func:`repro.core.channels.sample_channels_from` and then
+    overlays the carry-driven fields, so static components consume exactly
+    the seed model's sub-keys / variates *by construction* (XLA dead-code
+    eliminates the replaced draws) and a fully-static scenario reproduces it
+    bit-for-bit.
+    """
+    s = sample_channels_from(key, consts)
+    gm, ge = scn.gauss_markov, scn.gilbert_elliott
+    if gm is not None:
+        # exp(x - sigma^2/2): long-run mean is exactly the nominal rate
+        s = s._replace(bandwidth_mb_s=consts.bw_nominal *
+                       jnp.exp(carry.bw_log - 0.5 * gm.sigma ** 2))
+    if ge is not None:
+        s = s._replace(up=carry.good)
+    return s
+
+
+def dropout_mask(scn: Scenario, base: Array, t: Array, dev_ids: Array
+                 ) -> Array:
+    """(M,) bool: which devices lose their whole uplink at sync round ``t``.
+
+    Keyed per (round, device) on TAG_DROP, so engines agree regardless of
+    which devices actually sync (counter-based keys have no consumption
+    state)."""
+    if not scn.has_dropout:
+        return jnp.zeros(dev_ids.shape, bool)
+    u = jax.vmap(
+        lambda i: jax.random.uniform(stream_key(base, TAG_DROP, t, i)))(
+        dev_ids)
+    return u < scn.drop_probs(dev_ids)
+
+
+# ---------------------------------------------------------------------------
+# named-scenario registry
+# ---------------------------------------------------------------------------
+
+SCENARIOS: dict[str, Scenario] = {
+    # the seed environment: memoryless jitter, IID availability, IID data
+    "static": Scenario(name="static"),
+    # dense urban mobility: slowly-wandering bandwidth, occasional short
+    # outage bursts (shadowing around corners)
+    "markov_urban": Scenario(
+        name="markov_urban",
+        gauss_markov=GaussMarkovSpec(rho=0.95, sigma=0.5),
+        gilbert_elliott=GilbertElliottSpec(p_gb=0.05, p_bg=0.5)),
+    # highway handovers: fast-decorrelating bandwidth, frequent but brief
+    # outages
+    "markov_highway": Scenario(
+        name="markov_highway",
+        gauss_markov=GaussMarkovSpec(rho=0.7, sigma=0.8),
+        gilbert_elliott=GilbertElliottSpec(p_gb=0.15, p_bg=0.6)),
+    # bursty loss regime + flaky devices: every 4th device drops whole sync
+    # uploads 30% of the time -- the graceful-degradation stress test
+    "gilbert_flaky": Scenario(
+        name="gilbert_flaky",
+        gilbert_elliott=GilbertElliottSpec(p_gb=0.2, p_bg=0.3),
+        dropout=DropoutSpec(base_prob=0.05, flaky_every=4, flaky_prob=0.3)),
+    # statistical heterogeneity only: Dirichlet(0.3) label skew, static net
+    "dirichlet0.3": Scenario(
+        name="dirichlet0.3", partition="dirichlet", alpha=0.3),
+    # the kitchen sink: correlated channels + skewed data + flaky stragglers
+    "mobile_noniid": Scenario(
+        name="mobile_noniid",
+        gauss_markov=GaussMarkovSpec(rho=0.9, sigma=0.5),
+        gilbert_elliott=GilbertElliottSpec(p_gb=0.1, p_bg=0.4),
+        dropout=DropoutSpec(base_prob=0.02, flaky_every=4, flaky_prob=0.2),
+        straggler=StragglerSpec(slow_every=4, slowdown=3.0),
+        partition="dirichlet", alpha=0.3),
+}
+
+
+def get_scenario(scenario: str | Scenario | None) -> Scenario:
+    """Resolve a registry name (or pass a Scenario through; None = static)."""
+    if scenario is None:
+        return SCENARIOS["static"]
+    if isinstance(scenario, Scenario):
+        return scenario
+    try:
+        return SCENARIOS[scenario]
+    except KeyError:
+        raise ValueError(
+            f"unknown scenario {scenario!r}; registered: "
+            f"{sorted(SCENARIOS)}") from None
+
+
+def partition_fn(scn: Scenario):
+    """The data partitioner named by ``scn.partition`` as
+    ``f(x, y, m, seed) -> [(x_i, y_i)]`` (resolved lazily to keep this
+    module importable without the data package)."""
+    from repro.data import (partition_dirichlet, partition_iid,
+                            partition_noniid, partition_quantity_skew)
+    if scn.partition == "iid":
+        return lambda x, y, m, seed: partition_iid(x, y, m, seed)
+    if scn.partition == "noniid":
+        return lambda x, y, m, seed: partition_noniid(x, y, m, seed=seed)
+    if scn.partition == "dirichlet":
+        return lambda x, y, m, seed: partition_dirichlet(
+            x, y, m, alpha=scn.alpha, seed=seed)
+    if scn.partition == "quantity":
+        return lambda x, y, m, seed: partition_quantity_skew(
+            x, y, m, alpha=scn.alpha, seed=seed)
+    raise ValueError(f"unknown partition {scn.partition!r}")

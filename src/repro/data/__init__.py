@@ -1,10 +1,15 @@
-"""Data pipelines: synthetic MNIST, embedded Shakespeare, LM token streams."""
+"""Data pipelines: synthetic MNIST, embedded Shakespeare, LM token streams,
+and federated partitioners (IID, label-subset, Dirichlet, quantity skew)."""
 from .mnist import load_synthetic_mnist, partition_iid, partition_noniid
+from .partition import (label_marginals, partition_dirichlet,
+                        partition_quantity_skew, skew_score)
 from .shakespeare import CHAR_VOCAB, char_batches, load_shakespeare
 from .tokens import TokenPipeline, synthetic_token_batch
 
 __all__ = [
     "load_synthetic_mnist", "partition_iid", "partition_noniid",
+    "label_marginals", "partition_dirichlet", "partition_quantity_skew",
+    "skew_score",
     "CHAR_VOCAB", "char_batches", "load_shakespeare",
     "TokenPipeline", "synthetic_token_batch",
 ]

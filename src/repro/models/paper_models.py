@@ -12,7 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fl import FLTask
-from repro.data.mnist import load_synthetic_mnist, partition_iid
+from repro.core.scenario import Scenario, get_scenario, partition_fn
+from repro.data.mnist import load_synthetic_mnist
 from repro.data.shakespeare import VOCAB_SIZE, char_batches, load_shakespeare
 
 Array = jax.Array
@@ -116,9 +117,20 @@ def rnn_logits(params: dict, x: Array) -> Array:
 # ---------------------------------------------------------------------------
 
 def make_mnist_task(model: str = "lr", m_devices: int = 3, n_train: int = 6000,
-                    seed: int = 0) -> FLTask:
+                    seed: int = 0, partition: str = "iid",
+                    alpha: float = 0.5,
+                    scenario: str | Scenario | None = None) -> FLTask:
+    """``partition``/``alpha`` select the device data sharding ("iid",
+    "noniid", "dirichlet", "quantity"); passing ``scenario`` (a registry
+    name or Scenario) takes the sharding from the scenario instead, so the
+    same object that drives the engines' channel dynamics also shapes the
+    task's statistical heterogeneity."""
+    if scenario is not None:
+        scn = get_scenario(scenario)
+        partition, alpha = scn.partition, scn.alpha
     (xtr, ytr), (xte, yte) = load_synthetic_mnist(n_train=n_train, seed=seed)
-    shards = partition_iid(xtr, ytr, m_devices, seed)
+    shards = partition_fn(Scenario(partition=partition, alpha=alpha))(
+        xtr, ytr, m_devices, seed)
     init, logits = (lr_init, lr_logits) if model == "lr" else (cnn_init, cnn_logits)
 
     def loss_fn(params, batch):

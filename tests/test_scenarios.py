@@ -1,0 +1,413 @@
+"""Scenario subsystem (repro.core.scenario): dynamic environments as
+first-class citizens of the engine-equivalence invariant.
+
+Every named scenario in the registry -- Gauss-Markov bandwidth,
+Gilbert-Elliott burst availability, device dropout/stragglers, Dirichlet
+data skew -- must run through the loop, batched and sharded engines and
+produce the same History: allclose for loop-vs-batched (float reduction
+order differs), BIT-identical for batched-vs-sharded with the gather server
+reduce, allclose for psum.  The sharded check runs at every mesh size the
+process can build (1-way and the full device count), so the test-sharded CI
+lane exercises >= 2 shard counts.
+
+Plus: Hypothesis property tests for all four partitioners, chain
+stationarity (catches sign/decay-rate bugs in the carry update), and the
+error-feedback graceful-degradation regression under ``gilbert_flaky``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SCENARIOS, FLConfig, FixedController, LGCSimulator,
+                        get_scenario, make_fleet_ddpg, run_baseline,
+                        tree_size)
+from repro.core.channels import DEFAULT_CHANNELS, stack_specs
+from repro.core.scenario import (TAG_CHANNEL, GilbertElliottSpec, Scenario,
+                                 init_carry, sample_from_carry, step_carry,
+                                 stream_key)
+from repro.data import (partition_dirichlet, partition_iid, partition_noniid,
+                        partition_quantity_skew, skew_score)
+from repro.launch.mesh import make_host_mesh
+from repro.models.paper_models import make_mnist_task
+
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
+
+N_DEV = len(jax.devices())
+SHARD_COUNTS = sorted({1, N_DEV})        # >= 2 mesh sizes when devices allow
+M = 8                                    # divides every power-of-two mesh
+
+_TASKS: dict = {}
+_BATCHED: dict = {}
+
+
+def _cfg(name: str) -> FLConfig:
+    return FLConfig(rounds=18, eval_every=6, scenario=name)
+
+
+def _task(name: str):
+    """One task per (partition, alpha) -- scenarios sharing a data
+    distribution share the task, so e.g. static vs gilbert_flaky Histories
+    are directly comparable."""
+    scn = get_scenario(name)
+    key = (scn.partition, scn.alpha)
+    if key not in _TASKS:
+        _TASKS[key] = make_mnist_task("lr", m_devices=M, n_train=1600,
+                                      scenario=name)
+    return _TASKS[key]
+
+
+def _batched_hist(name: str):
+    if name not in _BATCHED:
+        _BATCHED[name] = run_baseline(_task(name), _cfg(name), "lgc", h=4,
+                                      engine="batched")
+    return _BATCHED[name]
+
+
+class TestScenarioEngineEquivalence:
+    """loop == batched == sharded for every registry scenario."""
+
+    @pytest.mark.parametrize("name", sorted(SCENARIOS))
+    def test_loop_matches_batched(self, name):
+        h_loop = run_baseline(_task(name), _cfg(name), "lgc", h=4,
+                              engine="loop")
+        h_bat = _batched_hist(name)
+        assert h_loop.step == h_bat.step
+        np.testing.assert_allclose(h_bat.loss, h_loop.loss, atol=1e-4)
+        np.testing.assert_allclose(h_bat.accuracy, h_loop.accuracy,
+                                   atol=1e-4)
+        np.testing.assert_allclose(h_bat.uplink_mb, h_loop.uplink_mb,
+                                   atol=1e-4)
+        np.testing.assert_allclose(h_bat.energy_j, h_loop.energy_j,
+                                   rtol=1e-5)
+        np.testing.assert_allclose(h_bat.time_s, h_loop.time_s, rtol=1e-5)
+
+    @pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+    @pytest.mark.parametrize("name", sorted(SCENARIOS))
+    def test_sharded_bit_identical(self, name, n_shards):
+        """gather-mode History carries the exact same floats at every mesh
+        size -- the scenario carry is sharded state, but the chains are keyed
+        by global device id, so the shard layout cannot matter."""
+        h_sh = run_baseline(_task(name), _cfg(name), "lgc", h=4,
+                            engine="sharded", mesh=make_host_mesh(n_shards))
+        assert h_sh.asdict() == _batched_hist(name).asdict()
+
+    @pytest.mark.parametrize("name", ["markov_urban", "gilbert_flaky"])
+    def test_psum_allclose(self, name):
+        h_ps = run_baseline(_task(name), _cfg(name), "lgc", h=4,
+                            engine="sharded", server_reduce="psum")
+        h_bat = _batched_hist(name)
+        np.testing.assert_allclose(h_ps.loss, h_bat.loss, atol=1e-4)
+        np.testing.assert_allclose(h_ps.uplink_mb, h_bat.uplink_mb,
+                                   atol=1e-4)
+
+    @pytest.mark.parametrize("mode", ["fedavg", "lgc_q8"])
+    def test_other_modes_under_dropout(self, mode):
+        """Dropout folds into ch.up before the mode branches, so the dense
+        fedavg path (best-up-channel choice) and the QSGD path (quantization
+        residual into EF) must stay engine-equivalent under gilbert_flaky."""
+        cfg = FLConfig(rounds=12, eval_every=6, scenario="gilbert_flaky")
+        task = _task("gilbert_flaky")
+        h_loop = run_baseline(task, cfg, mode, h=4, engine="loop")
+        h_bat = run_baseline(task, cfg, mode, h=4, engine="batched")
+        h_sh = run_baseline(task, cfg, mode, h=4, engine="sharded")
+        np.testing.assert_allclose(h_bat.loss, h_loop.loss, atol=1e-4)
+        np.testing.assert_allclose(h_bat.uplink_mb, h_loop.uplink_mb,
+                                   atol=1e-4)
+        assert h_sh.asdict() == h_bat.asdict()
+
+    def test_fedavg_total_outage_uploads_nothing(self):
+        """A device with every channel down must lose its dense FedAvg
+        upload entirely -- no bytes billed, no update applied (FedAvg has
+        no error feedback to carry the mass)."""
+        blackout = Scenario(name="blackout", gilbert_elliott=GilbertElliottSpec(
+            p_gb=1.0, p_bg=1e-9))           # stationary availability ~ 0
+        cfg = FLConfig(rounds=8, eval_every=4, scenario=blackout)
+        task = _task("static")
+        h_loop = run_baseline(task, cfg, "fedavg", h=4, engine="loop")
+        h_bat = run_baseline(task, cfg, "fedavg", h=4, engine="batched")
+        h_sh = run_baseline(task, cfg, "fedavg", h=4, engine="sharded")
+        assert h_bat.uplink_mb[-1] == 0.0
+        assert h_bat.energy_j[-1] == pytest.approx(h_loop.energy_j[-1])
+        np.testing.assert_allclose(h_bat.loss, h_loop.loss, atol=1e-4)
+        assert h_sh.asdict() == h_bat.asdict()
+
+    def test_heterogeneous_gaps_dynamic_scenario(self):
+        """Ragged sync sets + evolving chains: the chunked window scan must
+        advance the carry through exactly the same rounds as the loop."""
+        cfg = FLConfig(rounds=25, eval_every=8, max_gap=6,
+                       scenario="markov_urban")
+
+        def ctrls():
+            return [FixedController(2 + (m % 5), [200, 300, 400])
+                    for m in range(M)]
+        hists = {}
+        for engine in ("loop", "batched", "sharded"):
+            hists[engine] = LGCSimulator(_task("markov_urban"), cfg, ctrls(),
+                                         mode="lgc", engine=engine).run()
+        np.testing.assert_allclose(hists["batched"].loss,
+                                   hists["loop"].loss, atol=1e-4)
+        np.testing.assert_allclose(hists["batched"].uplink_mb,
+                                   hists["loop"].uplink_mb, atol=1e-4)
+        assert hists["sharded"].asdict() == hists["batched"].asdict()
+
+    def test_ddpg_fleet_dynamic_scenario_bit_identical(self):
+        """The full learned control plane on a dynamic scenario: scenario
+        costs feed the controller states, so sharded-vs-batched bitwise
+        History proves the whole feedback loop is shard-layout free."""
+        task = _task("markov_urban")
+        d = tree_size(task.init(jax.random.PRNGKey(0)))
+        cfg = FLConfig(rounds=20, eval_every=8, scenario="markov_urban")
+        h_bat = LGCSimulator(task, cfg, make_fleet_ddpg(M, d), mode="lgc",
+                             engine="batched").run()
+        h_sh = LGCSimulator(task, cfg, make_fleet_ddpg(M, d), mode="lgc",
+                            engine="sharded").run()
+        assert h_sh.asdict() == h_bat.asdict()
+
+    def test_dropout_actually_reduces_uplink(self):
+        """static and gilbert_flaky share task + sync schedule; dropped
+        uplinks must show up as strictly less transmitted traffic."""
+        h_static = _batched_hist("static")
+        h_flaky = _batched_hist("gilbert_flaky")
+        assert h_flaky.uplink_mb[-1] < h_static.uplink_mb[-1]
+
+
+# ---------------------------------------------------------------------------
+# partitioner properties
+# ---------------------------------------------------------------------------
+
+_N = 400
+_PRNG = np.random.default_rng(99)
+_PX = np.stack([np.arange(_N), np.arange(_N)], 1).astype(np.float32)
+_PY = _PRNG.integers(0, 10, _N).astype(np.int32)
+
+
+def _ids(shards):
+    """Original sample indices of every shard (x rows encode their index)."""
+    return [s[0][:, 0].astype(np.int64) for s in shards]
+
+
+def _assert_exact_partition(shards, n):
+    ids = np.concatenate(_ids(shards))
+    assert len(ids) == n                      # nothing lost
+    assert len(np.unique(ids)) == n           # nothing duplicated
+    assert all(s[1].size > 0 for s in shards)  # every device non-empty
+
+
+def _assert_deterministic(fn, m, **kw):
+    a, b = fn(_PX, _PY, m, **kw), fn(_PX, _PY, m, **kw)
+    for (xa, ya), (xb, yb) in zip(a, b):
+        np.testing.assert_array_equal(xa, xb)
+        np.testing.assert_array_equal(ya, yb)
+
+
+class TestPartitionerProperties:
+    @settings(max_examples=12, deadline=None)
+    @given(st.integers(2, 16), st.integers(0, 10_000), st.integers(1, 300))
+    def test_dirichlet_exact_partition(self, m, seed, alpha100):
+        shards = partition_dirichlet(_PX, _PY, m, alpha=alpha100 / 100,
+                                     seed=seed)
+        _assert_exact_partition(shards, _N)
+
+    @settings(max_examples=12, deadline=None)
+    @given(st.integers(2, 16), st.integers(0, 10_000), st.integers(1, 300))
+    def test_quantity_skew_exact_partition(self, m, seed, alpha100):
+        shards = partition_quantity_skew(_PX, _PY, m, alpha=alpha100 / 100,
+                                         seed=seed)
+        _assert_exact_partition(shards, _N)
+
+    @settings(max_examples=12, deadline=None)
+    @given(st.integers(1, 16), st.integers(0, 10_000))
+    def test_iid_exact_partition(self, m, seed):
+        shards = partition_iid(_PX, _PY, m, seed=seed)
+        _assert_exact_partition(shards, _N)
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(2, 8), st.integers(0, 10_000))
+    def test_noniid_no_duplicates_within_device(self, m, seed):
+        """The legacy label-subset partitioner subsamples (not an exact
+        partition by design) but must stay duplicate-free per device,
+        non-empty, and label-restricted."""
+        shards = partition_noniid(_PX, _PY, m, classes_per_device=4,
+                                  seed=seed)
+        assert len(shards) == m
+        for ids, (_, y) in zip(_ids(shards), shards):
+            assert y.size > 0
+            assert len(np.unique(ids)) == len(ids)
+            assert len(np.unique(y)) <= 4
+
+    def test_deterministic_per_seed(self):
+        _assert_deterministic(partition_dirichlet, 6, alpha=0.3, seed=11)
+        _assert_deterministic(partition_quantity_skew, 6, alpha=0.3, seed=11)
+        _assert_deterministic(partition_iid, 6, seed=11)
+        _assert_deterministic(partition_noniid, 6, seed=11)
+
+    def test_dirichlet_alpha_direction(self):
+        """Low alpha => high label skew; high alpha => near-IID."""
+        lo = np.mean([skew_score(partition_dirichlet(_PX, _PY, 10,
+                                                     alpha=0.1, seed=s))
+                      for s in range(3)])
+        hi = np.mean([skew_score(partition_dirichlet(_PX, _PY, 10,
+                                                     alpha=100.0, seed=s))
+                      for s in range(3)])
+        assert lo > hi + 0.2
+
+    def test_quantity_skew_alpha_direction(self):
+        """Low alpha => unequal shard sizes (max/min ratio grows)."""
+        def imbalance(alpha):
+            sizes = [y.size for _, y in partition_quantity_skew(
+                _PX, _PY, 10, alpha=alpha, seed=4)]
+            return max(sizes) / min(sizes)
+        assert imbalance(0.1) > imbalance(100.0) * 2
+
+    def test_more_devices_than_samples_raises(self):
+        with pytest.raises(ValueError):
+            partition_quantity_skew(_PX[:3], _PY[:3], 5)
+
+
+# ---------------------------------------------------------------------------
+# chain stationarity (catches sign/decay-rate bugs in the carry update)
+# ---------------------------------------------------------------------------
+
+class TestChainStationarity:
+    T, M_CH = 2000, 32
+
+    def _rollout(self, scn):
+        consts = stack_specs(DEFAULT_CHANNELS)
+        base = jax.random.PRNGKey(7)
+        dev_ids = jnp.arange(self.M_CH, dtype=jnp.int32)
+        n_ch = len(DEFAULT_CHANNELS)
+        carry = jax.vmap(lambda i: init_carry(scn, base, i, n_ch))(dev_ids)
+
+        def body(c, t):
+            c = jax.vmap(
+                lambda cc, i: step_carry(scn, base, cc, t, i,
+                                         jnp.bool_(True)))(c, dev_ids)
+            s = jax.vmap(
+                lambda cc, i: sample_from_carry(
+                    scn, consts, cc, stream_key(base, TAG_CHANNEL, t, i)))(
+                c, dev_ids)
+            return c, (s.bandwidth_mb_s, s.up)
+
+        _, (bw, up) = jax.lax.scan(body, carry,
+                                   jnp.arange(self.T, dtype=jnp.int32))
+        return np.asarray(bw), np.asarray(up)   # (T, M, C)
+
+    def test_gauss_markov_long_run_mean_is_nominal(self):
+        scn = get_scenario("markov_urban")
+        bw, _ = self._rollout(scn)
+        nominal = np.array([c.bandwidth_mb_s for c in DEFAULT_CHANNELS])
+        emp = bw.mean((0, 1))
+        np.testing.assert_allclose(emp, nominal, rtol=0.10)
+
+    def test_gauss_markov_autocorrelation_matches_rho(self):
+        """Lag-1 autocorrelation of the log-bandwidth deviation equals the
+        spec's rho -- a sign or decay-rate bug in the carry update flips or
+        collapses this immediately."""
+        scn = get_scenario("markov_urban")
+        bw, _ = self._rollout(scn)
+        x = np.log(bw)                           # (T, M, C) log-bandwidth
+        x = x - x.mean(0, keepdims=True)
+        num = (x[1:] * x[:-1]).sum()
+        den = (x ** 2).sum()
+        rho_hat = num / den
+        assert abs(rho_hat - scn.gauss_markov.rho) < 0.05
+
+    def test_gilbert_elliott_stationary_availability(self):
+        for name in ("markov_urban", "gilbert_flaky"):
+            scn = get_scenario(name)
+            _, up = self._rollout(scn)
+            pi = scn.gilbert_elliott.stationary_availability
+            assert abs(up.mean() - pi) < 0.04, name
+
+    def test_gilbert_elliott_losses_are_bursty(self):
+        """P(down at t+1 | down at t) must exceed the unconditional down
+        rate -- the whole point of the two-state chain vs IID Bernoulli."""
+        scn = get_scenario("gilbert_flaky")
+        _, up = self._rollout(scn)
+        down = ~up
+        p_down = down.mean()
+        p_down_given_down = (down[1:] & down[:-1]).sum() / down[:-1].sum()
+        assert p_down_given_down > p_down + 0.15
+
+    def test_static_scenario_bitwise_matches_seed_model(self):
+        """The "static" registry entry must reproduce channels.py's
+        memoryless sampler exactly -- same sub-keys, same variates."""
+        from repro.core.channels import sample_channels_from
+        scn = get_scenario("static")
+        consts = stack_specs(DEFAULT_CHANNELS)
+        base = jax.random.PRNGKey(3)
+        carry = init_carry(scn, base, jnp.int32(4), len(DEFAULT_CHANNELS))
+        key = stream_key(base, TAG_CHANNEL, 17, 4)
+        a = sample_from_carry(scn, consts, carry, key)
+        b = sample_channels_from(key, consts)
+        for xa, xb in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+
+# ---------------------------------------------------------------------------
+# error feedback under burst loss + dropout (graceful degradation)
+# ---------------------------------------------------------------------------
+
+class TestErrorFeedbackUnderDropout:
+    def test_gilbert_flaky_ef_bounded_and_converges(self):
+        """channels.py's docstring claims the layered code degrades
+        gracefully when channels drop layers.  Under gilbert_flaky (bursty
+        outages + whole-device dropout) the EF residual must stay bounded --
+        undelivered mass is retransmitted, not accumulated forever -- and
+        the run must still learn."""
+        task = make_mnist_task("lr", m_devices=M, n_train=2000)
+        ctrls = [FixedController(4, [200, 300, 400]) for _ in range(M)]
+        cfg = FLConfig(rounds=60, eval_every=20, scenario="gilbert_flaky")
+        sim = LGCSimulator(task, cfg, ctrls, mode="lgc", engine="loop")
+        hist = sim.run()
+        assert hist.loss[-1] < hist.loss[0] - 0.2          # still converges
+        ef_norms = np.array([float(jnp.linalg.norm(e.e)) for e in sim.ef])
+        assert np.all(np.isfinite(ef_norms))
+        # bounded: the error memory stays on the scale of one model update
+        # (||e|| <= ||params|| is a generous ceiling; divergence would blow
+        # through it within a few missed syncs)
+        from repro.core import flatten_tree
+        p_norm = float(jnp.linalg.norm(flatten_tree(sim.params)))
+        assert ef_norms.max() < max(1.0, p_norm)
+
+
+# ---------------------------------------------------------------------------
+# registry / spec plumbing
+# ---------------------------------------------------------------------------
+
+class TestScenarioRegistry:
+    def test_unknown_name_raises(self):
+        with pytest.raises(ValueError, match="unknown scenario"):
+            get_scenario("nope")
+        # the simulator resolves the name at construction, not mid-run
+        with pytest.raises(ValueError, match="unknown scenario"):
+            LGCSimulator(_task("static"), FLConfig(scenario="nope"),
+                         [FixedController(4, [1, 1, 1])] * M)
+
+    def test_default_is_static(self):
+        assert get_scenario(None).is_static
+        assert get_scenario(FLConfig().scenario).is_static
+        assert not get_scenario("markov_urban").is_static
+
+    def test_scenario_object_passthrough(self):
+        scn = Scenario(name="custom")
+        assert get_scenario(scn) is scn
+
+    def test_drop_probs_flaky_pattern(self):
+        scn = get_scenario("gilbert_flaky")
+        p = np.asarray(scn.drop_probs(jnp.arange(8, dtype=jnp.int32)))
+        assert p[0] == p[4] == scn.dropout.flaky_prob
+        assert p[1] == p[2] == scn.dropout.base_prob
+
+    def test_straggler_profiles(self):
+        scn = get_scenario("mobile_noniid")
+        profiles = scn.device_profiles(8)
+        slow = scn.straggler.slowdown
+        assert profiles[0].comp_time_per_step_s == pytest.approx(
+            profiles[1].comp_time_per_step_s * slow)
+        assert profiles[4].comp_j_per_step == profiles[0].comp_j_per_step
+
+    def test_registry_names_are_consistent(self):
+        for name, scn in SCENARIOS.items():
+            assert scn.name == name
