@@ -56,7 +56,7 @@ def _steady_window_rate(sim, eng, m: int, h: int, k_windows: int):
         ts = jnp.arange(i * h, (i + 1) * h, dtype=jnp.int32)
         etas = jnp.asarray([sim._eta(t) for t in range(i * h, (i + 1) * h)],
                            jnp.float32)
-        return eng._window(*state, eng.data_x, eng.data_y, eng.n_dev,
+        return eng._window(*state, eng.data, eng.n_dev,
                            eng.dev_ids, ts, etas, valid, sync, ks_mat,
                            k_cap=k_cap)
 

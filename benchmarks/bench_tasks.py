@@ -1,0 +1,94 @@
+"""Task zoo sweep: throughput + smoke-budget accuracy for every registry
+task (repro.models.paper_models.TASKS) on the batched engine.
+
+The perf trajectory (BENCH_sim.json, BENCH_sharded.json) has so far only
+ever measured ``lr_mnist``; the paper's evaluation (§4.1) spans LR, CNN and
+a char-RNN.  This bench runs each registry task end-to-end under the fixed
+LGC controller and records the final loss/accuracy next to
+``device_steps_per_s`` -- the *steady-state* window throughput, measured
+with the compile-excluding chained-window pattern shared with
+``bench_sharded_scaling`` -- so a kernel or engine change that only helps
+flat float models can't hide (``wall_s`` keeps the end-to-end time,
+compile included, for reference).  Rows land in ``BENCH_tasks.json`` via
+``benchmarks/run.py --smoke`` (CI uploads it as an artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.core import (FLConfig, FixedController, LGCSimulator,
+                        run_baseline, tree_size)
+from repro.core.fl_batched import BatchedEngine
+from repro.models.paper_models import TASKS, make_task
+
+from .bench_sharded_scaling import _steady_window_rate
+from .common import emit
+
+
+# per-task shape knobs: keep every task inside the smoke budget while still
+# doing enough optimisation steps for the accuracy column to mean something
+_TASK_KW = {
+    "lr_mnist": dict(n_train=2000),
+    "cnn_mnist": dict(n_train=1200),
+    "rnn_shakespeare": dict(n_train=2000, seq=32),
+}
+
+
+def run(tasks=None, m: int = 8, rounds: int = 40, batch_size: int = 32,
+        emit_csv: bool = True) -> dict:
+    names = list(tasks or TASKS)
+    rows = []
+    for name in names:
+        task = make_task(name, m_devices=m, **_TASK_KW.get(name, {}))
+        d = tree_size(task.init(jax.random.PRNGKey(0)))
+        cfg = FLConfig(rounds=rounds, eval_every=max(rounds // 4, 1),
+                       batch_size=batch_size)
+        t0 = time.time()
+        hist = run_baseline(task, cfg, "lgc", h=4, engine="batched")
+        wall = time.time() - t0
+        # steady-state throughput: chain windows of one compiled program and
+        # time everything after the first call (compile excluded), same
+        # methodology as bench_sharded_scaling
+        sim = LGCSimulator(task, cfg,
+                           [FixedController(4, [200, 300, 400])] * m,
+                           mode="lgc", engine="batched")
+        eng = BatchedEngine(sim)
+        rate, _ = _steady_window_rate(sim, eng, m, h=4,
+                                      k_windows=max(rounds // 4, 4))
+        rows.append({
+            "task": name, "engine": "batched", "m_devices": m,
+            "rounds": rounds, "params_d": d, "wall_s": round(wall, 3),
+            "device_steps_per_s": round(rate, 1),
+            "final_loss": round(hist.loss[-1], 4),
+            "final_accuracy": round(hist.accuracy[-1], 4),
+            "uplink_mb": round(hist.uplink_mb[-1], 4),
+        })
+        if emit_csv:
+            emit(f"task_{name}", wall * 1e6 / rounds,
+                 f"device_steps_per_s={rows[-1]['device_steps_per_s']};"
+                 f"acc={rows[-1]['final_accuracy']};"
+                 f"loss={rows[-1]['final_loss']};d={d}")
+    return {"benchmark": "tasks", "m_devices": m, "rounds": rounds,
+            "rows": rows}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--m", type=int, default=8)
+    ap.add_argument("--tasks", default=None,
+                    help="comma-separated registry names (default: all)")
+    ap.add_argument("--out", default="BENCH_tasks.json")
+    args = ap.parse_args()
+    names = args.tasks.split(",") if args.tasks else None
+    res = run(tasks=names, m=args.m, rounds=args.rounds)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

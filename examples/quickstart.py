@@ -4,15 +4,24 @@ Trains logistic regression on synthetic MNIST across 3 edge devices with
 3 channels (3G/4G/5G), layered gradient compression and error feedback,
 and compares resource usage against FedAvg.
 
-  PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py [--rounds N] [--n-train N]
+
+(The CI docs lane runs this with a reduced budget so the documented entry
+point can't rot; defaults match the README walkthrough.)
 """
+import argparse
+
 from repro.core import FLConfig, run_baseline
 from repro.models.paper_models import make_mnist_task
 
 
 def main():
-    task = make_mnist_task("lr", m_devices=3, n_train=3000)
-    cfg = FLConfig(rounds=120, eval_every=20)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=120)
+    ap.add_argument("--n-train", type=int, default=3000)
+    args = ap.parse_args()
+    task = make_mnist_task("lr", m_devices=3, n_train=args.n_train)
+    cfg = FLConfig(rounds=args.rounds, eval_every=max(args.rounds // 6, 1))
 
     print("== LGC (layered compression, 3 channels, fixed H=4) ==")
     lgc = run_baseline(task, cfg, "lgc", h=4)

@@ -1,4 +1,9 @@
-"""LGC core: layered gradient compression, FL loop, channels, control."""
+"""LGC core: layered gradient compression, FL loop, channels, control.
+
+The modules below are bound together by the engine-equivalence ladder
+(loop ~ batched == sharded History; docs/ARCHITECTURE.md §1) -- each
+module's docstring names the invariant it participates in and the test
+that enforces it."""
 from .compressor import (LGCCompressor, flatten_tree, lgc_compress, lgc_layers,
                          lgc_compress_topk, lgc_compress_traced,
                          top_alpha_beta, top_k, tree_size, unflatten_like,

@@ -14,6 +14,13 @@ Each edge device connects to the server over N heterogeneous channels
 
 All sampling is numpy-free, driven by jax.random keys, so simulations are
 fully reproducible.
+
+Invariants: the memoryless sampler here is the "static" scenario's exact
+semantics (tests/test_scenarios.py::
+test_static_scenario_bitwise_matches_seed_model) and the cost model must
+price identically in both engines (tests/test_substrate.py::TestChannels;
+byte counts stay integer-valued so f32 accounting is exact below 2^24 --
+docs/ARCHITECTURE.md §2).
 """
 from __future__ import annotations
 

@@ -16,6 +16,12 @@ and sum(layers) == top_{K_C}(x) -- the property the server decode relies on.
 
 Histogram-threshold selection (the TPU-native approximation used by the
 Pallas kernels) lives in ``repro.kernels``; this module is the exact oracle.
+
+Invariants: layer disjointness / rank semantics are pinned by
+tests/test_compressor.py, and ``lgc_compress_topk`` (the argsort-free
+selection the batched engine uses) must stay exactly rank-equivalent to
+``lgc_compress`` (tests/test_compressor.py::TestTracedSelection) -- it
+feeds the engine-equivalence ladder (docs/ARCHITECTURE.md §1).
 """
 from __future__ import annotations
 

@@ -27,6 +27,12 @@ they are bit-identical for a fixed seed:
   exposing the classic per-device interface; element m of
   :func:`make_ddpg_controllers` equals device m of
   :func:`make_fleet_ddpg`, bit for bit.
+
+Invariant (keep it): per-device float math runs through ``lax.map`` bodies,
+NOT vmap -- XLA:CPU picks batch-shape-dependent fusion schedules for
+vmapped math, which would break the fleet==list bit-identity pinned by
+tests/test_fl.py::TestEngineEquivalence::test_fleet_matches_agent_list
+(docs/ARCHITECTURE.md §6).
 """
 from __future__ import annotations
 

@@ -1,9 +1,10 @@
 """Theorem 1 / Corollary 1 bound calculator (paper §2.2).
 
 Computes the upper bound on E[f(w_bar^{(T)})] - f* for smooth strongly-convex
-losses under LGC with error feedback, given problem constants.  Used by
-tests (the bound must be positive, decreasing in T, increasing in H) and by
-``benchmarks.bench_convergence_bound`` to tabulate the theory's predictions
+losses under LGC with error feedback, given problem constants.  The bound
+must be positive, decreasing in T and increasing in H
+(tests/test_fl.py::TestTheoremBounds);
+``benchmarks.bench_convergence_bound`` tabulates the theory's predictions
 against simulator behaviour.
 """
 from __future__ import annotations

@@ -8,8 +8,10 @@ The device-side update at a synchronization step t in I_m is
 
 Between synchronizations e_m is untouched (Algorithm 1 line 17).
 
-The invariant tested by tests/test_compressor.py::test_error_feedback_identity
-is  u == g + e'  exactly (floating-point exact, since g is a masked copy).
+The invariant is  u == g + e'  exactly (floating-point exact, since g is a
+masked copy) -- pinned by tests/test_compressor.py::TestErrorFeedback::
+test_identity_u_eq_g_plus_e; bounded EF growth under burst loss/dropout by
+tests/test_scenarios.py::TestErrorFeedbackUnderDropout.
 """
 from __future__ import annotations
 

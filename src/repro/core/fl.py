@@ -49,6 +49,10 @@ channel, LGC+QSGD int8).  ``backend="pallas"`` routes the flat-vector EF hot
 path through the fused Pallas kernel (:func:`repro.kernels.lgc_compress_hist`,
 histogram-threshold selection); ``backend="exact"`` (default) keeps the
 rank-exact oracle in :mod:`repro.core.compressor` as the reference.
+
+docs/ARCHITECTURE.md is the narrative behind all of the above (engines §1,
+key streams §3, controller protocol §6); change nothing here without
+reading it.
 """
 from __future__ import annotations
 
@@ -77,7 +81,8 @@ Array = jax.Array
 
 
 # ---------------------------------------------------------------------------
-# model + data interfaces (duck-typed; see repro.models.lr/cnn/rnn)
+# model + data interfaces (duck-typed; built by the task zoo factories in
+# repro.models.paper_models -- TASKS / make_task)
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass

@@ -55,6 +55,14 @@ float math is batch-shape stable on XLA:CPU, and the counter-based
 ``server_reduce="psum"`` crosses only the d-vector partial sums (O(d) per
 link instead of O(Md/D)) at the price of a reassociated float reduction:
 History then matches to ~1e-6, not bitwise.
+
+Invariants this module carries: the equivalence ladder (tests/test_fl.py::
+TestEngineEquivalence, tests/test_scenarios.py, tests/test_tasks.py --
+every registry task, LR/CNN/char-RNN, and every scenario must keep
+loop~batched allclose and batched==sharded bitwise) and the never-sampled
+padding of :func:`_stack_device_data`
+(tests/test_tasks.py::TestStackDeviceData).  The full story is
+docs/ARCHITECTURE.md §2 (window anatomy) and §4 (gather-vs-psum).
 """
 from __future__ import annotations
 
@@ -75,16 +83,26 @@ Array = jax.Array
 
 
 def _stack_device_data(device_data):
-    """Pad per-device shards to a common length and stack: (M, Nmax, ...)."""
-    ns = [int(x.shape[0]) for x, _ in device_data]
+    """Pad per-device shards to a common row count and stack each batch-pytree
+    leaf along a new leading device axis: (n_i, ...) -> (M, Nmax, ...).
+
+    Shards are arbitrary pytrees of arrays sharing a leading sample axis --
+    flat float features, NHWC image batches, int32 token sequences -- and
+    ragged across devices.  Padding rows are zeros and must never reach the
+    model: the window's minibatch gather draws indices in [0, n_i) per
+    device, so only real rows are sampled
+    (tests/test_tasks.py::TestStackDeviceData pins both properties)."""
+    ns = [int(jax.tree_util.tree_leaves(s)[0].shape[0]) for s in device_data]
     nmax = max(ns)
-    x0, y0 = device_data[0]
-    xs = np.zeros((len(ns), nmax) + x0.shape[1:], x0.dtype)
-    ys = np.zeros((len(ns), nmax) + y0.shape[1:], y0.dtype)
-    for i, (x, y) in enumerate(device_data):
-        xs[i, : x.shape[0]] = x
-        ys[i, : y.shape[0]] = y
-    return jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(ns, jnp.int32)
+
+    def stack(*leaves):
+        out = np.zeros((len(leaves), nmax) + leaves[0].shape[1:],
+                       leaves[0].dtype)
+        for i, a in enumerate(leaves):
+            out[i, : a.shape[0]] = a
+        return jnp.asarray(out)
+    data = jax.tree_util.tree_map(stack, *device_data)
+    return data, jnp.asarray(ns, jnp.int32)
 
 
 class BatchedEngine:
@@ -102,8 +120,7 @@ class BatchedEngine:
         self.m = sim.m_devices
         self.d = sim.d
         self.n_ch = len(cfg.channels)
-        self.data_x, self.data_y, self.n_dev = _stack_device_data(
-            sim.task.device_data)
+        self.data, self.n_dev = _stack_device_data(sim.task.device_data)
         self.dev_ids = jnp.arange(self.m, dtype=jnp.int32)
         # stacked per-device state (Algorithm 1 line 1)
         self.w_hat = jax.tree_util.tree_map(
@@ -140,17 +157,20 @@ class BatchedEngine:
         consts = stack_specs(cfg.channels)
         scn = sim.scenario
 
-        def local_round(w_hat, t, eta, valid, data_x, data_y, n_dev, dev_ids):
+        def local_round(w_hat, t, eta, valid, data, n_dev, dev_ids):
             keys = jax.vmap(lambda i: stream_key(base, TAG_BATCH, t, i))(
                 dev_ids)
 
-            def dev(w, key, n, x, y):
+            def dev(w, key, n, rows):
+                # gather bounded by the device's true row count n, so the
+                # zero-padding rows of the stacked shards are never sampled
                 idx = jax.random.randint(key, (bsz,), 0, n)
-                grads = jax.grad(loss_fn)(w, (x[idx], y[idx]))
+                batch = jax.tree_util.tree_map(lambda a: a[idx], rows)
+                grads = jax.grad(loss_fn)(w, batch)
                 # padded scan steps (valid=False) leave w bitwise untouched
                 return jax.tree_util.tree_map(
                     lambda p, gi: jnp.where(valid, p - eta * gi, p), w, grads)
-            return jax.vmap(dev)(w_hat, keys, n_dev, data_x, data_y)
+            return jax.vmap(dev)(w_hat, keys, n_dev, data)
 
         def compress(ef, delta, ks_mat, recv, k_cap):
             """(g, ef_new) for all devices; layered EF, backend-dispatched."""
@@ -167,7 +187,7 @@ class BatchedEngine:
                 u, ks_mat, recv)
             return g, u - g
 
-        def window(params, w_hat, anchor, ef, scen_carry, data_x, data_y,
+        def window(params, w_hat, anchor, ef, scen_carry, data,
                    n_dev, dev_ids, ts, etas, valid, sync_mask, ks_mat, *,
                    k_cap):
             """ts/etas/valid: (L,) round indices, step sizes, padding mask
@@ -180,7 +200,7 @@ class BatchedEngine:
             def body(state, sc):
                 w, carry = state
                 t, eta, v = sc
-                w = local_round(w, t, eta, v, data_x, data_y, n_dev, dev_ids)
+                w = local_round(w, t, eta, v, data, n_dev, dev_ids)
                 carry = jax.vmap(
                     lambda c, i: step_carry(scn, base, c, t, i, v))(
                     carry, dev_ids)
@@ -290,7 +310,7 @@ class BatchedEngine:
             (sim.params, self.w_hat, self.anchor, self.ef, self.scen_carry,
              costs) = self._window(
                 sim.params, self.w_hat, self.anchor, self.ef,
-                self.scen_carry, self.data_x, self.data_y, self.n_dev,
+                self.scen_carry, self.data, self.n_dev,
                 self.dev_ids, ts, etas, valid, self._sync_mask(te),
                 self._ks_mat(), k_cap=self._k_cap())
             rec = [r for r in range(t, te)
@@ -385,16 +405,17 @@ class ShardedEngine(BatchedEngine):
 
         from jax.sharding import PartitionSpec as P
         shard, rep = P(self.axis), P()
-        # args: params, w_hat, anchor, ef, scen_carry, data_x, data_y,
-        #       n_dev, dev_ids, ts, etas, valid, sync_mask, ks_mat
-        self._in_specs = (rep, shard, shard, shard, shard, shard, shard,
+        # args: params, w_hat, anchor, ef, scen_carry, data (a batch pytree
+        #       -- the single spec applies leaf-wise as a prefix), n_dev,
+        #       dev_ids, ts, etas, valid, sync_mask, ks_mat
+        self._in_specs = (rep, shard, shard, shard, shard, shard,
                           shard, shard, rep, rep, rep, shard, shard)
         self._out_specs = (rep, shard, shard, shard, shard, shard)
         # pre-place the stacked state and data so every window call reuses
         # the resident shards instead of re-scattering from host
         place = lambda tree: jax.device_put(
             tree, shardings(self.mesh, shard))
-        self.data_x, self.data_y = place(self.data_x), place(self.data_y)
+        self.data = place(self.data)
         self.n_dev, self.dev_ids = place(self.n_dev), place(self.dev_ids)
         self.w_hat = place(self.w_hat)
         self.anchor, self.ef = place(self.anchor), place(self.ef)

@@ -39,6 +39,9 @@ invariant extends to every scenario (tests/test_scenarios.py).
 
 ``FLConfig.scenario`` accepts a :class:`Scenario` or a registry name --
 see :data:`SCENARIOS` ("static", "markov_urban", "gilbert_flaky", ...).
+The carry-threading invariant and the TAG registry are documented in
+docs/ARCHITECTURE.md §3/§5; chain stationarity is pinned by
+tests/test_scenarios.py::TestChainStationarity.
 """
 from __future__ import annotations
 

@@ -1,15 +1,24 @@
 """Data pipelines: synthetic MNIST, embedded Shakespeare, LM token streams,
-and federated partitioners (IID, label-subset, Dirichlet, quantity skew)."""
+and federated partitioners (IID, label-subset, Dirichlet, quantity skew).
+
+Every loader/partitioner here is deterministic per ``seed`` and produces the
+per-device shards behind the task zoo
+(:data:`repro.models.paper_models.TASKS`); partition invariants (exact
+partitions, non-empty devices, alpha skew direction) are pinned by
+tests/test_scenarios.py::TestPartitionerProperties, and the Shakespeare
+train/eval split disjointness by tests/test_tasks.py."""
 from .mnist import load_synthetic_mnist, partition_iid, partition_noniid
 from .partition import (label_marginals, partition_dirichlet,
                         partition_quantity_skew, skew_score)
-from .shakespeare import CHAR_VOCAB, char_batches, load_shakespeare
+from .shakespeare import (CHAR_VOCAB, VOCAB_SIZE, char_batches, char_shards,
+                          char_windows, load_shakespeare, split_stream)
 from .tokens import TokenPipeline, synthetic_token_batch
 
 __all__ = [
     "load_synthetic_mnist", "partition_iid", "partition_noniid",
     "label_marginals", "partition_dirichlet", "partition_quantity_skew",
     "skew_score",
-    "CHAR_VOCAB", "char_batches", "load_shakespeare",
+    "CHAR_VOCAB", "VOCAB_SIZE", "char_batches", "char_shards",
+    "char_windows", "load_shakespeare", "split_stream",
     "TokenPipeline", "synthetic_token_batch",
 ]

@@ -1,10 +1,14 @@
-"""Synthetic MNIST stand-in (offline container -- see DESIGN.md §8.1).
+"""Synthetic MNIST stand-in (the container is offline, so the loader is
+procedural instead of a download).
 
 Generates a deterministic, learnable 10-class 28x28 grayscale dataset:
 each class has a distinct stroke template (rendered from a small set of
 line/arc primitives) plus per-sample affine jitter and pixel noise.  A linear
 model reaches ~90% and a small CNN >97% on it, mirroring real-MNIST relative
-difficulty, which is what the paper's Figures 3-4 exercise.
+difficulty, which is what the paper's Figures 3-4 exercise (the ``lr_mnist``
+and ``cnn_mnist`` entries of :data:`repro.models.paper_models.TASKS`).
+Partitioner invariants (determinism, per-device duplicate-freedom) are
+pinned by tests/test_scenarios.py::TestPartitionerProperties.
 """
 from __future__ import annotations
 

@@ -4,8 +4,21 @@ The container is offline, so we embed a public-domain excerpt (sonnets +
 play fragments) and tile it with light stochastic re-ordering to reach the
 requested corpus size.  Character-level vocabulary mirrors the LEAF /
 FedML Shakespeare setup the paper uses.
+
+Federated sharding goes through :func:`char_shards`: the stream is first cut
+into a disjoint train/test split (:func:`split_stream` -- the held-out
+evaluation windows can never overlap a device shard), train windows are
+drawn deterministically per seed, and each window carries a *region label*
+(which tenth of the corpus it starts in -- the "which play" proxy) so the
+standard federated partitioners (IID / label-subset / Dirichlet / quantity
+skew, :mod:`repro.data.partition`) apply to character data unchanged.
+Invariants -- disjointness, determinism, exact-partition pass-through -- are
+pinned by tests/test_tasks.py (docs/ARCHITECTURE.md §5 explains how task
+data feeds the engine-equivalence ladder).
 """
 from __future__ import annotations
+
+from typing import Callable
 
 import numpy as np
 
@@ -97,7 +110,92 @@ def load_shakespeare(n_chars: int = 200_000, seed: int = 0) -> np.ndarray:
 def char_batches(stream: np.ndarray, batch: int, seq: int,
                  rng: np.random.Generator) -> tuple[np.ndarray, np.ndarray]:
     """Sample (inputs, targets) next-char pairs of shape (batch, seq)."""
-    starts = rng.integers(0, stream.shape[0] - seq - 1, batch)
+    x, y, _ = char_windows(stream, batch, seq, rng)
+    return x, y
+
+
+def char_windows(stream: np.ndarray, n: int, seq: int,
+                 rng: np.random.Generator
+                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """``char_batches`` that also returns the window start positions, so
+    callers can derive position-based metadata (region labels, overlap
+    checks)."""
+    starts = rng.integers(0, stream.shape[0] - seq - 1, n)
     x = np.stack([stream[s:s + seq] for s in starts])
     y = np.stack([stream[s + 1:s + seq + 1] for s in starts])
-    return x, y
+    return x, y, starts
+
+
+def split_stream(stream: np.ndarray, test_frac: float = 0.15
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """Cut a character stream into disjoint (train, test) tails.
+
+    The test split is the *tail* of the stream, carved before any window is
+    drawn, so held-out evaluation sequences share no character position with
+    any device shard (pinned by
+    tests/test_tasks.py::TestShakespeareTask::test_eval_split_is_disjoint).
+
+    Caveat: the guarantee is *positional*, not content-level.  The embedded
+    corpus tiles a ~2.5 KB excerpt to size, so most eval windows have
+    byte-identical twins in the train region; eval numbers on the synthetic
+    stream measure fitting, not generalization.  Swap in a real corpus
+    (one untiled pass of text) and the positional split becomes a true
+    held-out split with no code change.
+    """
+    if not 0.0 < test_frac < 1.0:
+        raise ValueError(f"test_frac must be in (0, 1), got {test_frac}")
+    cut = stream.shape[0] - max(1, int(round(stream.shape[0] * test_frac)))
+    if cut < 1:
+        raise ValueError(
+            f"stream of {stream.shape[0]} chars leaves no train split at "
+            f"test_frac={test_frac}")
+    return stream[:cut], stream[cut:]
+
+
+N_REGIONS = 10   # corpus tenths used as the "which play" pseudo-labels
+
+
+def char_shards(stream: np.ndarray, m_devices: int, *, seq: int,
+                n_train: int, n_eval: int, seed: int,
+                partition_fn: Callable[[np.ndarray, np.ndarray, int, int],
+                                       list],
+                test_frac: float = 0.15
+                ) -> tuple[list[tuple[np.ndarray, np.ndarray]],
+                           tuple[np.ndarray, np.ndarray]]:
+    """Deterministic federated shards + held-out eval batch for a char LM.
+
+    1. ``split_stream`` carves a positionally disjoint test tail (see its
+       docstring for the content-duplication caveat of the tiled synthetic
+       corpus).
+    2. ``n_train`` (input, target) windows of length ``seq`` are drawn from
+       the train split with ``default_rng(seed)`` -- fully deterministic.
+       The eval windows come from an *independent* generator, so the
+       held-out set is a fixed function of (seed, seq, n_eval) and stays
+       comparable across train budgets.
+    3. Each window is labeled with the corpus region (tenth) it starts in,
+       and ``partition_fn(x, labels, m, seed)`` -- any of the
+       :mod:`repro.data.partition` / :mod:`repro.data.mnist` partitioners --
+       deals the windows to devices by that label, giving character data the
+       same statistical-heterogeneity controls as MNIST.
+    4. The eval batch is drawn from the test split only.
+    """
+    train, test = split_stream(stream, test_frac)
+    if test.shape[0] <= seq + 1 or train.shape[0] <= seq + 1:
+        raise ValueError(
+            f"splits of {train.shape[0]}/{test.shape[0]} chars are shorter "
+            f"than seq+1={seq + 1}; lower seq or test_frac")
+    rng = np.random.default_rng(seed)
+    x, y, starts = char_windows(train, n_train, seq, rng)
+    regions = (starts.astype(np.int64) * N_REGIONS
+               // train.shape[0]).astype(np.int32)
+    # partition *indices* by region label, then gather the windows: the
+    # partitioners see (index-column, label) arrays, so their exact-partition
+    # and determinism guarantees transfer unchanged
+    idx_shards = partition_fn(np.arange(n_train, dtype=np.int64)[:, None],
+                              regions, m_devices, seed)
+    shards = [(x[ids[:, 0]], y[ids[:, 0]]) for ids, _ in idx_shards]
+    # independent stream: the eval set must not move when n_train (or any
+    # other train-side draw) changes
+    xte, yte, _ = char_windows(test, n_eval, seq,
+                               np.random.default_rng((seed, 0xE7A1)))
+    return shards, (xte, yte)

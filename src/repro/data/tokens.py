@@ -2,7 +2,8 @@
 
 Produces deterministic synthetic token streams with Zipfian unigram
 statistics plus short-range bigram structure so that per-step loss actually
-decreases during smoke training (a uniform stream would be incompressible).
+decreases during smoke training (a uniform stream would be incompressible);
+determinism and statistics are pinned by tests/test_substrate.py::TestData.
 """
 from __future__ import annotations
 

@@ -11,7 +11,9 @@ delta, write u, read u, write g, write e').  The fused kernel reads e and
 delta once and writes g and e' once -- 4 D-sized transfers, the HBM lower
 bound -- recomputing u in VMEM.  Layer membership is a chain of C threshold
 comparisons against scalar bin edges produced by
-:mod:`repro.kernels.topk_threshold` (C is static, <= 4 channels).
+:mod:`repro.kernels.topk_threshold` (C is static, <= 4 channels).  The
+fused output must preserve the EF identity u == g + e' bit-exactly
+(tests/test_kernels.py::TestSparsifyEF).
 
 Blocks are (block_rows, 128) VMEM tiles over the lane-major view of the
 flat gradient, same layout as the statistics kernels.

@@ -8,8 +8,9 @@ Two families of semantics:
   match these *bit-exactly* (same bins, same edges); tests assert allclose
   with zero/epsilon tolerance against these.
 
-The histogram method is the TPU-native adaptation of Top_k (DESIGN.md §3):
-a 2-pass max-abs + 256-bin magnitude histogram replaces the global sort.
+The histogram method is the TPU-native adaptation of Top_k: a 2-pass
+max-abs + 256-bin magnitude histogram replaces the global sort (bit-exact
+kernel-vs-oracle agreement pinned by tests/test_kernels.py).
 """
 from __future__ import annotations
 

@@ -2,7 +2,7 @@
 
 One new query token attends to a ring-buffer KV cache of window size W
 (the sub-quadratic attention used by dense architectures at long_500k;
-DESIGN.md §4).  Per (batch, head) grid step the kernel holds the query row
+oracle agreement pinned by tests/test_kernels.py::TestSWADecode).  Per (batch, head) grid step the kernel holds the query row
 and one W x Dh K/V tile in VMEM and runs an online-softmax (flash) loop
 over W in chunks, so the softmax is single-pass and never materialises the
 (W,) probability vector in HBM.

@@ -1,6 +1,8 @@
 """Pallas TPU kernels: magnitude statistics for histogram-Top_k selection.
 
-TPU-native replacement for the global sort behind Top_k (DESIGN.md §3):
+TPU-native replacement for the global sort behind Top_k (must match the
+:mod:`repro.kernels.ref` oracles bit-exactly --
+tests/test_kernels.py::TestMaxAbs/TestHistogram):
 
   pass 1: ``maxabs``    -- blocked max-|x| reduction
   pass 2: ``histogram`` -- blocked 256-bin magnitude histogram

@@ -4,17 +4,27 @@
 Implemented from scratch (no flax): params are nested dicts of jnp arrays,
 forward passes are plain functions -- the same convention used by the big
 model zoo in :mod:`repro.models.transformer`.
+
+The :data:`TASKS` registry (mirroring ``SCENARIOS`` in
+:mod:`repro.core.scenario`) names the paper's three workloads --
+``lr_mnist``, ``cnn_mnist``, ``rnn_shakespeare`` -- behind one
+:func:`make_task` entry point; every registry task runs through all three
+engines and inherits the loop~batched (allclose) / batched==sharded
+(bitwise, gather mode) equivalence invariant
+(tests/test_tasks.py::TestTaskEngineEquivalence; see
+docs/ARCHITECTURE.md §5).
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.fl import FLTask
 from repro.core.scenario import Scenario, get_scenario, partition_fn
 from repro.data.mnist import load_synthetic_mnist
-from repro.data.shakespeare import VOCAB_SIZE, char_batches, load_shakespeare
+from repro.data.shakespeare import VOCAB_SIZE, char_shards, load_shakespeare
 
 Array = jax.Array
 
@@ -144,17 +154,32 @@ def make_mnist_task(model: str = "lr", m_devices: int = 3, n_train: int = 6000,
                   name=f"{model}-mnist")
 
 
-def make_shakespeare_task(m_devices: int = 3, seq: int = 48,
-                          seed: int = 0) -> FLTask:
+def make_shakespeare_task(m_devices: int = 3, seq: int = 48, seed: int = 0,
+                          n_train: int | None = None, n_eval: int = 1024,
+                          partition: str = "dirichlet", alpha: float = 0.5,
+                          scenario: str | Scenario | None = None,
+                          test_frac: float = 0.15) -> FLTask:
+    """Char-RNN task with the same partition/scenario surface as
+    :func:`make_mnist_task`: sequence windows are drawn deterministically
+    from a train split that is disjoint from the held-out eval split
+    (:func:`repro.data.shakespeare.char_shards`), labeled by corpus region
+    (the "which play" proxy), and dealt to devices by any registered
+    partitioner.  The default Dirichlet-over-regions partition keeps the
+    natural different-plays non-IID-ness of the seed task as an *exact*
+    partition (all ``n_train`` windows train, each on exactly one device --
+    the legacy ``"noniid"`` partitioner subsamples and may duplicate);
+    passing ``scenario`` takes partition and alpha from the scenario,
+    exactly like MNIST."""
+    if scenario is not None:
+        scn = get_scenario(scenario)
+        partition, alpha = scn.partition, scn.alpha
     stream = load_shakespeare(seed=seed)
-    # per-device contiguous slices (natural non-iid: different plays)
-    parts = np.array_split(stream, m_devices)
-    rng = np.random.default_rng(seed)
-
-    def materialise(part, n=2000):
-        return char_batches(part, n, seq, rng)
-    shards = [materialise(p) for p in parts]
-    xte, yte = char_batches(stream, 1024, seq, rng)
+    n_train = 2000 * m_devices if n_train is None else n_train
+    shards, eval_data = char_shards(
+        stream, m_devices, seq=seq, n_train=n_train, n_eval=n_eval,
+        seed=seed, test_frac=test_frac,
+        partition_fn=partition_fn(Scenario(partition=partition,
+                                           alpha=alpha)))
 
     def loss_fn(params, batch):
         x, y = batch
@@ -163,5 +188,54 @@ def make_shakespeare_task(m_devices: int = 3, seq: int = 48,
     def metric_fn(params, batch):
         x, y = batch
         return _acc(rnn_logits(params, x), y)
-    return FLTask(rnn_init, loss_fn, metric_fn, shards, (xte, yte),
+    return FLTask(rnn_init, loss_fn, metric_fn, shards, eval_data,
                   name="rnn-shakespeare")
+
+
+# ---------------------------------------------------------------------------
+# the task zoo registry (mirrors SCENARIOS in repro.core.scenario)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TaskSpec:
+    """One registry workload: which model/dataset, and the partition the
+    task defaults to when no scenario overrides it."""
+    name: str
+    model: str              # "lr" | "cnn" | "gru"
+    dataset: str            # "mnist" | "shakespeare"
+    partition: str          # default data sharding (scenario= overrides)
+
+    def make(self, m_devices: int = 3, seed: int = 0,
+             scenario: str | Scenario | None = None, **kw) -> FLTask:
+        kw.setdefault("partition", self.partition)
+        if self.dataset == "mnist":
+            return make_mnist_task(self.model, m_devices, seed=seed,
+                                   scenario=scenario, **kw)
+        return make_shakespeare_task(m_devices, seed=seed,
+                                     scenario=scenario, **kw)
+
+
+TASKS: dict[str, TaskSpec] = {
+    # the paper's §4.1 evaluation zoo: LR and CNN on (synthetic) MNIST, a
+    # GRU char-RNN on Shakespeare
+    "lr_mnist": TaskSpec("lr_mnist", model="lr", dataset="mnist",
+                         partition="iid"),
+    "cnn_mnist": TaskSpec("cnn_mnist", model="cnn", dataset="mnist",
+                          partition="iid"),
+    "rnn_shakespeare": TaskSpec("rnn_shakespeare", model="gru",
+                                dataset="shakespeare",
+                                partition="dirichlet"),
+}
+
+
+def make_task(name: str, m_devices: int = 3, seed: int = 0,
+              scenario: str | Scenario | None = None, **kw) -> FLTask:
+    """One entry point for the whole zoo: resolve a registry name and build
+    the task (``scenario=`` shapes the data exactly as in the per-dataset
+    factories; extra kwargs pass through, e.g. ``n_train``/``seq``)."""
+    try:
+        spec = TASKS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown task {name!r}; registered: {sorted(TASKS)}") from None
+    return spec.make(m_devices, seed=seed, scenario=scenario, **kw)

@@ -7,8 +7,8 @@ property on ``max_examples`` seeded pseudo-random draws -- weaker than real
 shrinking/coverage, but the invariants still get exercised in CI images
 without the dependency.
 
-Only the strategy surface this repo uses is implemented: ``st.integers``
-and ``st.composite``.
+Only the strategy surface this repo uses is implemented: ``st.integers``,
+``st.lists`` and ``st.composite``.
 """
 from __future__ import annotations
 
@@ -34,6 +34,13 @@ except ImportError:                       # pragma: no cover - env dependent
         @staticmethod
         def integers(min_value: int, max_value: int) -> _Strategy:
             return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def lists(elements: _Strategy, min_size: int = 0,
+                  max_size: int = 10) -> _Strategy:
+            return _Strategy(lambda rng: [
+                elements.draw(rng)
+                for _ in range(rng.randint(min_size, max_size))])
 
         @staticmethod
         def composite(fn):
