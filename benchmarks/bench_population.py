@@ -1,0 +1,77 @@
+"""Population-scale sweep: every EF store over a 100k-device population.
+
+The tentpole claim of the population layer (docs/ARCHITECTURE.md §8) is
+that cohort sampling makes N >= 100k devices simulable, and that the
+compressed EF stores trade measured accuracy for the N x D residual
+memory.  This bench runs the same sampled-cohort workload
+(:func:`repro.core.population.run_population`, batched blocking, uniform
+sampler) once per registered store -- "dense" (lossless reference),
+"int8" (quantized residuals), "server" (one aggregate residual) -- and
+records the exact EF-state footprint next to the smoke-budget
+loss/accuracy, so a store whose approximation hurts convergence can't
+hide.  Rows land in ``BENCH_population.json`` via ``benchmarks/run.py
+--smoke`` (CI uploads it as an artifact, mirroring BENCH_tasks.json).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core import FLConfig
+from repro.core.error_feedback import EF_STORES
+from repro.core.population import (make_population, make_population_task,
+                                   run_population)
+
+from .common import emit
+
+
+def run(n_devices: int = 100_000, m_cohort: int = 64, rounds: int = 24,
+        stores=None, emit_csv: bool = True) -> dict:
+    task = make_population_task(n_shards=8, n_train=2048, seed=0)
+    rows = []
+    dense_bytes = None
+    for store in (stores or list(EF_STORES)):
+        pop = make_population(task, n_devices, ef_store=store)
+        cfg = FLConfig(rounds=rounds, eval_every=max(rounds // 4, 1))
+        t0 = time.time()
+        hist = run_population(pop, cfg, "lgc", h=4, m_cohort=m_cohort,
+                              engine="batched")
+        wall = time.time() - t0
+        if store == "dense":
+            dense_bytes = pop.ef_nbytes
+        rows.append({
+            "ef_store": store, "n_devices": n_devices,
+            "m_cohort": m_cohort, "rounds": rounds, "params_d": pop.d,
+            "ef_bytes": pop.ef_nbytes,
+            "ef_bytes_vs_dense": (round(pop.ef_nbytes / dense_bytes, 4)
+                                  if dense_bytes else None),
+            "wall_s": round(wall, 3),
+            "final_loss": round(hist.loss[-1], 4),
+            "final_accuracy": round(hist.accuracy[-1], 4),
+            "uplink_mb": round(hist.uplink_mb[-1], 4),
+        })
+        if emit_csv:
+            emit(f"population_{store}", wall * 1e6 / rounds,
+                 f"ef_bytes={pop.ef_nbytes};"
+                 f"acc={rows[-1]['final_accuracy']};"
+                 f"loss={rows[-1]['final_loss']};n={n_devices}")
+    return {"benchmark": "population", "n_devices": n_devices,
+            "m_cohort": m_cohort, "rounds": rounds, "rows": rows}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-devices", type=int, default=100_000)
+    ap.add_argument("--m-cohort", type=int, default=64)
+    ap.add_argument("--rounds", type=int, default=24)
+    ap.add_argument("--out", default="BENCH_population.json")
+    args = ap.parse_args()
+    res = run(n_devices=args.n_devices, m_cohort=args.m_cohort,
+              rounds=args.rounds)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

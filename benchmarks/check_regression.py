@@ -1,36 +1,49 @@
-"""Bench regression gate: fail CI when the batched engine slows down.
+"""Bench regression gate: fail CI when simulator throughput slows down.
 
-Compares the batched-engine ``device_steps_per_s`` rows of a freshly
-generated BENCH_sim.json against the committed BENCH_baseline.json and exits
-nonzero when any matching (mode, engine, M) row regresses more than
-``--tolerance`` (default 30%).  Rows present on only one side are reported
-but never fail the gate (new sweeps should not need a baseline update to
-land), and faster-than-baseline rows print so improvements are visible in
-the CI log.
+Two gates, each naming the metric and file that tripped:
 
-The committed baseline was measured on a 2-core container -- slower than the
-CI runners -- so the gate only trips on real order-of-magnitude regressions
-(a lost jit, an accidental O(M) host loop), not runner jitter.  Refresh it
-with:
+* **engine gate** -- the batched-engine ``device_steps_per_s`` rows of a
+  freshly generated BENCH_sim.json vs the committed BENCH_baseline.json,
+  keyed by (mode, engine, M);
+* **task gate** -- the per-task ``device_steps_per_s`` rows of
+  BENCH_tasks.json vs the committed BENCH_tasks_baseline.json, keyed by
+  (task, engine, M).  cnn_mnist runs at ~3.4 device-steps/s in the smoke
+  budget, one silent regression away from unusable, which is why tasks get
+  their own gate.
 
-    python -m benchmarks.run --smoke && cp BENCH_sim.json BENCH_baseline.json
+Exits nonzero when any matching row regresses more than ``--tolerance``
+(default 30%).  Rows present on only one side are reported but never fail
+the gate (new sweeps should not need a baseline update to land), and
+faster-than-baseline rows print so improvements are visible in the CI log.
+A missing tasks baseline file skips the task gate with a note (the engine
+gate still runs).
+
+The committed baselines were measured on a 2-core container -- slower than
+the CI runners -- so the gates only trip on real order-of-magnitude
+regressions (a lost jit, an accidental O(M) host loop), not runner jitter.
+Refresh both (the recipe also lives in README.md's benchmarking section):
+
+    python -m benchmarks.run --smoke
+    cp BENCH_sim.json BENCH_baseline.json
+    cp BENCH_tasks.json BENCH_tasks_baseline.json
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 
-def check(baseline: dict, current: dict, tolerance: float,
-          engines: tuple[str, ...] = ("batched",)) -> list[str]:
-    base_rows = {(r["mode"], r["engine"], r["m_devices"]): r
-                 for r in baseline["rows"]}
+def _gate(base_rows: dict, current: dict, tolerance: float, key_of,
+          row_filter, label: str) -> list[str]:
+    """Generic throughput gate over ``device_steps_per_s`` rows; returns
+    failure strings naming the metric, key and file that tripped."""
     seen, failures = set(), []
     for r in current["rows"]:
-        if r["engine"] not in engines:
+        if not row_filter(r):
             continue
-        key = (r["mode"], r["engine"], r["m_devices"])
+        key = key_of(r)
         seen.add(key)
         b = base_rows.get(key)
         if b is None:
@@ -45,17 +58,42 @@ def check(baseline: dict, current: dict, tolerance: float,
               f"{r['device_steps_per_s']:.1f} device-steps/s  "
               f"({ratio:.2f}x, floor {floor:.1f})")
         if verdict == "REGRESSED":
-            failures.append(f"{key}: {ratio:.2f}x of baseline")
+            failures.append(f"{label} device_steps_per_s {key}: "
+                            f"{ratio:.2f}x of baseline")
     for key in set(base_rows) - seen:
-        if base_rows[key]["engine"] in engines:
+        if row_filter(base_rows[key]):
             print(f"  baseline row missing from current run: {key}")
     return failures
+
+
+def check(baseline: dict, current: dict, tolerance: float,
+          engines: tuple[str, ...] = ("batched",)) -> list[str]:
+    """Engine gate: (mode, engine, M)-keyed rows of BENCH_sim.json."""
+    base_rows = {(r["mode"], r["engine"], r["m_devices"]): r
+                 for r in baseline["rows"]}
+    return _gate(base_rows, current, tolerance,
+                 key_of=lambda r: (r["mode"], r["engine"], r["m_devices"]),
+                 row_filter=lambda r: r["engine"] in engines,
+                 label="BENCH_sim.json")
+
+
+def check_tasks(baseline: dict, current: dict, tolerance: float
+                ) -> list[str]:
+    """Task gate: (task, engine, M)-keyed rows of BENCH_tasks.json."""
+    base_rows = {(r["task"], r["engine"], r["m_devices"]): r
+                 for r in baseline["rows"]}
+    return _gate(base_rows, current, tolerance,
+                 key_of=lambda r: (r["task"], r["engine"], r["m_devices"]),
+                 row_filter=lambda r: True,
+                 label="BENCH_tasks.json")
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_baseline.json")
     ap.add_argument("--current", default="BENCH_sim.json")
+    ap.add_argument("--tasks-baseline", default="BENCH_tasks_baseline.json")
+    ap.add_argument("--tasks-current", default="BENCH_tasks.json")
     ap.add_argument("--tolerance", type=float, default=0.30,
                     help="allowed fractional drop in device_steps_per_s")
     args = ap.parse_args()
@@ -66,6 +104,19 @@ def main() -> int:
     print(f"bench regression gate: tolerance {args.tolerance:.0%} "
           f"({args.baseline} vs {args.current})")
     failures = check(baseline, current, args.tolerance)
+    if os.path.exists(args.tasks_baseline) and \
+            os.path.exists(args.tasks_current):
+        with open(args.tasks_baseline) as f:
+            tasks_baseline = json.load(f)
+        with open(args.tasks_current) as f:
+            tasks_current = json.load(f)
+        print(f"per-task gate: tolerance {args.tolerance:.0%} "
+              f"({args.tasks_baseline} vs {args.tasks_current})")
+        failures += check_tasks(tasks_baseline, tasks_current,
+                                args.tolerance)
+    else:
+        print(f"per-task gate skipped: {args.tasks_baseline} or "
+              f"{args.tasks_current} not found")
     if failures:
         print("bench regression gate FAILED:")
         for f_ in failures:

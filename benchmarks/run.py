@@ -28,15 +28,17 @@ def main() -> None:
                     help="path for the scenario-zoo fixed-vs-DDPG rows")
     ap.add_argument("--tasks-json", default="BENCH_tasks.json",
                     help="path for the task-zoo throughput/accuracy rows")
+    ap.add_argument("--population-json", default="BENCH_population.json",
+                    help="path for the population EF-store rows")
     args = ap.parse_args()
 
     from benchmarks import (bench_compressor_throughput,
                             bench_controller_scaling,
                             bench_convergence_bound, bench_fig3_lr_mnist,
                             bench_fig5_drl, bench_fig6_rnn_shakespeare,
-                            bench_scenarios, bench_sharded_scaling,
-                            bench_sim_scaling, bench_table1_channels,
-                            bench_tasks)
+                            bench_population, bench_scenarios,
+                            bench_sharded_scaling, bench_sim_scaling,
+                            bench_table1_channels, bench_tasks)
 
     bench_table1_channels.run()                                  # Table 1
     bench_convergence_bound.run()                                # Thm 1
@@ -48,6 +50,8 @@ def main() -> None:
             device_counts=(1, 8), m=256, rounds=24, k_windows=15)
         scen = bench_scenarios.run(m=8, rounds=30, n_train=1500)  # scenario zoo
         tasks = bench_tasks.run(m=8, rounds=24)                  # task zoo
+        popn = bench_population.run(n_devices=100_000, m_cohort=64,
+                                    rounds=24)                   # EF stores
         bench_fig3_lr_mnist.run(model="lr", rounds=40, n_train=1200)
     else:
         sim = bench_sim_scaling.run(ms=(8, 64, 256), rounds=200)
@@ -56,6 +60,8 @@ def main() -> None:
             device_counts=(1, 2, 4, 8), m=256, rounds=40)
         scen = bench_scenarios.run(m=16, rounds=120, n_train=4000)
         tasks = bench_tasks.run(m=16, rounds=80)
+        popn = bench_population.run(n_devices=100_000, m_cohort=64,
+                                    rounds=80)
         bench_fig3_lr_mnist.run(model="lr", rounds=100, n_train=2000)  # Fig 3
         bench_fig3_lr_mnist.run(model="cnn", rounds=40, n_train=1500)  # Fig 4
         bench_fig5_drl.run(rounds=120)                           # Fig 5
@@ -71,6 +77,8 @@ def main() -> None:
         json.dump(scen, f, indent=1)
     with open(args.tasks_json, "w") as f:
         json.dump(tasks, f, indent=1)
+    with open(args.population_json, "w") as f:
+        json.dump(popn, f, indent=1)
 
 
 if __name__ == '__main__':

@@ -8,7 +8,9 @@ from .compressor import (LGCCompressor, flatten_tree, lgc_compress, lgc_layers,
                          lgc_compress_topk, lgc_compress_traced,
                          top_alpha_beta, top_k, tree_size, unflatten_like,
                          wire_bytes)
-from .error_feedback import EFState, ef_compress, init_ef
+from .error_feedback import (EF_STORES, DenseEFStore, EFState, Int8EFStore,
+                             ServerEFStore, ef_compress, init_ef,
+                             make_ef_store)
 from .channels import (DEFAULT_CHANNELS, ChannelSpec, DeviceProfile,
                        comm_cost, comp_cost, sample_channels)
 from .fl import (ControllerFleet, FLConfig, FLTask, FixedController, History,
@@ -18,13 +20,16 @@ from .scenario import (SCENARIOS, DropoutSpec, GaussMarkovSpec,
                        get_scenario)
 from .controller import (DDPGConfig, DDPGController, FleetDDPG,
                          make_ddpg_controllers, make_fleet_ddpg)
+from .population import (COHORT_SAMPLERS, Population, make_population,
+                         make_population_task, run_population, sample_cohort)
 from .convergence import ProblemConstants, corollary1_rate, theorem1_bound
 
 __all__ = [
     "LGCCompressor", "flatten_tree", "lgc_compress", "lgc_layers",
     "lgc_compress_topk", "lgc_compress_traced",
     "top_alpha_beta", "top_k", "tree_size", "unflatten_like", "wire_bytes",
-    "EFState", "ef_compress", "init_ef",
+    "EF_STORES", "DenseEFStore", "EFState", "Int8EFStore", "ServerEFStore",
+    "ef_compress", "init_ef", "make_ef_store",
     "DEFAULT_CHANNELS", "ChannelSpec", "DeviceProfile", "comm_cost",
     "comp_cost", "sample_channels",
     "ControllerFleet", "FLConfig", "FLTask", "FixedController", "History",
@@ -34,4 +39,6 @@ __all__ = [
     "DDPGConfig", "DDPGController", "FleetDDPG",
     "make_ddpg_controllers", "make_fleet_ddpg",
     "ProblemConstants", "corollary1_rate", "theorem1_bound",
+    "COHORT_SAMPLERS", "Population", "make_population",
+    "make_population_task", "run_population", "sample_cohort",
 ]

@@ -12,6 +12,31 @@ The invariant is  u == g + e'  exactly (floating-point exact, since g is a
 masked copy) -- pinned by tests/test_compressor.py::TestErrorFeedback::
 test_identity_u_eq_g_plus_e; bounded EF growth under burst loss/dropout by
 tests/test_scenarios.py::TestErrorFeedbackUnderDropout.
+
+Population-scale storage.  At N >= 100k devices the dense (N, D) f32 error
+memory is the RAM blocker (ROADMAP item 1), so this module also provides the
+pluggable **EF stores** used by :mod:`repro.core.population`: host-resident
+(numpy) per-device residual state with a ``gather(ids) -> (M, D) f32`` /
+``scatter(ids, ef)`` cohort interface and an exact ``nbytes`` accounting.
+
+* :class:`DenseEFStore` -- (N, D) f32; the lossless reference.
+  Gather/scatter roundtrip is bitwise exact --
+  tests/test_population.py::TestEFStores::test_dense_roundtrip_exact.
+* :class:`Int8EFStore` -- int8 codes + one f32 scale per device
+  (``scale = max|e| / 127``, symmetric round-to-nearest).  Per-element
+  decode error is <= scale/2 = max|e|/254; total footprint is
+  ``N*D + 4N`` bytes, i.e. ~26% of dense for D >= 20 --
+  tests/test_population.py::TestEFStores (error bound + byte ratio).
+* :class:`ServerEFStore` -- ONE aggregate (D,) residual held server-side
+  (devices stay stateless).  ``gather`` broadcasts it to every cohort row;
+  ``scatter`` keeps the cohort mean, which realizes the shared-memory update
+  e' = e + mean(u_m) - mean(g_m) without touching the window body --
+  tests/test_population.py::TestEFStores::test_server_store_semantics.
+
+Stores are registered in :data:`EF_STORES` ("dense" | "int8" | "server");
+their measured accuracy cost lives in BENCH_population.json
+(benchmarks/bench_population.py) and the trade-off table in
+docs/ARCHITECTURE.md §8.
 """
 from __future__ import annotations
 
@@ -19,6 +44,7 @@ from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .compressor import LGCCompressor
 
@@ -58,3 +84,112 @@ def ef_compress(state: EFState, delta: Array, compressor: LGCCompressor,
     e_new = u - g_sent if received is not None else u - g_all
     del g_all
     return g_sent, EFState(e=e_new)
+
+
+# ---------------------------------------------------------------------------
+# population-scale EF stores (host-resident; cohort gather/scatter interface)
+# ---------------------------------------------------------------------------
+
+class DenseEFStore:
+    """(N, D) f32 residuals on the host -- the lossless reference store.
+
+    4*N*D bytes: ~3 GB for N=100k at MNIST-LR size (D=7850), which is why
+    the int8 and server-side stores below exist.
+    """
+
+    name = "dense"
+
+    def __init__(self, n: int, d: int):
+        self.n, self.d = n, d
+        self._e = np.zeros((n, d), np.float32)
+
+    @property
+    def nbytes(self) -> int:
+        return self._e.nbytes
+
+    def gather(self, ids: np.ndarray) -> Array:
+        """(M, D) f32 residuals of the cohort, device-ready."""
+        return jnp.asarray(self._e[ids])
+
+    def scatter(self, ids: np.ndarray, ef: Array) -> None:
+        """Write the cohort's post-window residuals back."""
+        self._e[ids] = np.asarray(ef, np.float32)
+
+
+class Int8EFStore:
+    """int8 residual codes + one f32 scale per device.
+
+    Symmetric per-device quantization: ``scale = max|e| / 127``,
+    ``code = rint(e / scale)``; decode is ``code * scale``.  Per-element
+    error <= scale/2.  N*(D + 4) bytes total -- ~26% of dense at D=68,
+    dropping toward 25% as D grows.  An all-zero residual row stores
+    scale 0 and decodes to exact zeros (no 0/0).
+    """
+
+    name = "int8"
+
+    def __init__(self, n: int, d: int):
+        self.n, self.d = n, d
+        self._codes = np.zeros((n, d), np.int8)
+        self._scale = np.zeros((n,), np.float32)
+
+    @property
+    def nbytes(self) -> int:
+        return self._codes.nbytes + self._scale.nbytes
+
+    def gather(self, ids: np.ndarray) -> Array:
+        dec = (self._codes[ids].astype(np.float32)
+               * self._scale[ids, None])
+        return jnp.asarray(dec)
+
+    def scatter(self, ids: np.ndarray, ef: Array) -> None:
+        ef = np.asarray(ef, np.float32)
+        scale = np.max(np.abs(ef), axis=1) / 127.0
+        safe = np.where(scale > 0, scale, 1.0)
+        self._codes[ids] = np.rint(ef / safe[:, None]).astype(np.int8)
+        self._scale[ids] = scale
+
+
+class ServerEFStore:
+    """One aggregate (D,) residual held at the server; devices are stateless.
+
+    ``gather`` hands every cohort row the same shared residual, the window
+    body computes per-row  e_m' = u_m - g_m  as usual, and ``scatter`` keeps
+    the cohort mean -- algebraically  e' = e + mean(delta_m) - mean(g_m),
+    the shared-memory error-feedback update, with the window body literally
+    unchanged.  4*D bytes regardless of N.
+    """
+
+    name = "server"
+
+    def __init__(self, n: int, d: int):
+        self.n, self.d = n, d
+        self._e = np.zeros((d,), np.float32)
+
+    @property
+    def nbytes(self) -> int:
+        return self._e.nbytes
+
+    def gather(self, ids: np.ndarray) -> Array:
+        return jnp.broadcast_to(jnp.asarray(self._e),
+                                (len(ids), self.d))
+
+    def scatter(self, ids: np.ndarray, ef: Array) -> None:
+        self._e = np.asarray(ef, np.float32).mean(axis=0)
+
+
+EF_STORES: dict[str, type] = {
+    "dense": DenseEFStore,
+    "int8": Int8EFStore,
+    "server": ServerEFStore,
+}
+
+
+def make_ef_store(kind: str, n: int, d: int):
+    """Instantiate a registered EF store ("dense" | "int8" | "server")."""
+    try:
+        cls = EF_STORES[kind]
+    except KeyError:
+        raise ValueError(f"unknown EF store {kind!r}; registered: "
+                         f"{sorted(EF_STORES)}") from None
+    return cls(n, d)

@@ -71,10 +71,10 @@ from .error_feedback import EFState, ef_compress
 # counter-based randomness and environment dynamics live one layer below, in
 # repro.core.scenario; the tags and stream_key are re-exported here because
 # every engine/controller/test imports them from this module
-from .scenario import (TAG_BATCH, TAG_CHANNEL, TAG_CTRL_NOISE,  # noqa: F401
-                       TAG_CTRL_SAMPLE, TAG_DROP, TAG_EVAL, TAG_QUANT,
-                       TAG_REWARD, TAG_SCEN, TAG_SCEN_INIT, Scenario,
-                       dropout_mask, get_scenario, init_carry,
+from .scenario import (TAG_BATCH, TAG_CHANNEL, TAG_COHORT,  # noqa: F401
+                       TAG_CTRL_NOISE, TAG_CTRL_SAMPLE, TAG_DROP, TAG_EVAL,
+                       TAG_QUANT, TAG_REWARD, TAG_SCEN, TAG_SCEN_INIT,
+                       Scenario, dropout_mask, get_scenario, init_carry,
                        sample_from_carry, step_carry, stream_key)
 
 Array = jax.Array

@@ -105,6 +105,141 @@ def _stack_device_data(device_data):
     return data, jnp.asarray(ns, jnp.int32)
 
 
+def make_device_phase(*, cfg, loss_fn, base, mode, backend, scenario,
+                      d: int, n_ch: int):
+    """Build the per-device half of the sync window as a standalone function.
+
+    The returned ``device_phase`` runs everything in the window that is
+    independent per device -- the local-SGD scan, scenario-carry stepping,
+    channel sampling, layered compression + error feedback, and cost
+    accounting -- on an (M_blk, ·) block of stacked state, and returns the
+    masked per-device updates ``g`` *without* the server aggregation:
+
+        device_phase(w_hat, anchor, ef, scen_carry, data, n_dev, dev_ids,
+                     ts, etas, valid, sync_mask, ks_mat, *, k_cap)
+          -> (w_hat', scen_carry', g_masked, ef', costs)
+
+    The block size M_blk is whatever the leading axis of the inputs says:
+    :class:`BatchedEngine` calls it with the full (M, ·) stack,
+    :class:`ShardedEngine` with (M/D, ·) mesh-local blocks, and the
+    population cohort engines (:mod:`repro.core.population`) with gathered
+    cohort blocks down to single rows -- the per-row float math is
+    batch-shape stable on XLA:CPU (docs/ARCHITECTURE.md §4, §8), which is
+    what the bitwise halves of the equivalence ladder rest on.  All random
+    streams are keyed by the *global* device ids in ``dev_ids``, so the
+    blocking can never change the simulated trajectory.
+    """
+    bsz = cfg.batch_size
+    vb, ib = cfg.value_bytes, cfg.index_bytes
+    consts = stack_specs(cfg.channels)
+    scn = scenario
+
+    def local_round(w_hat, t, eta, valid, data, n_dev, dev_ids):
+        keys = jax.vmap(lambda i: stream_key(base, TAG_BATCH, t, i))(
+            dev_ids)
+
+        def dev(w, key, n, rows):
+            # gather bounded by the device's true row count n, so the
+            # zero-padding rows of the stacked shards are never sampled
+            idx = jax.random.randint(key, (bsz,), 0, n)
+            batch = jax.tree_util.tree_map(lambda a: a[idx], rows)
+            grads = jax.grad(loss_fn)(w, batch)
+            # padded scan steps (valid=False) leave w bitwise untouched
+            return jax.tree_util.tree_map(
+                lambda p, gi: jnp.where(valid, p - eta * gi, p), w, grads)
+        return jax.vmap(dev)(w_hat, keys, n_dev, data)
+
+    def compress(ef, delta, ks_mat, recv, k_cap):
+        """(g, ef_new) for all devices; layered EF, backend-dispatched."""
+        if backend == "pallas":
+            from repro.kernels import lgc_compress_hist
+            cum = jnp.cumsum(ks_mat, axis=1)
+            return jax.vmap(
+                lambda e, dl, ck, rc: lgc_compress_hist(
+                    e, dl, ck, rc.astype(jnp.int32)))(
+                ef, delta, cum, recv)
+        u = ef + delta
+        g = jax.vmap(
+            lambda ui, ki, ri: lgc_compress_topk(ui, ki, ri, k_cap))(
+            u, ks_mat, recv)
+        return g, u - g
+
+    def device_phase(w_hat, anchor, ef, scen_carry, data, n_dev, dev_ids,
+                     ts, etas, valid, sync_mask, ks_mat, *, k_cap):
+        """ts/etas/valid: (L,) round indices, step sizes, padding mask
+        (L is padded to a power of two so few scan programs compile);
+        ks_mat: (M_blk, C); scen_carry: (M_blk, ·) scenario chain state,
+        advanced one step per valid scanned round (padded steps leave it
+        bitwise untouched)."""
+        def body(state, sc):
+            w, carry = state
+            t, eta, v = sc
+            w = local_round(w, t, eta, v, data, n_dev, dev_ids)
+            carry = jax.vmap(
+                lambda c, i: step_carry(scn, base, c, t, i, v))(
+                carry, dev_ids)
+            return (w, carry), None
+        (w_hat, scen_carry), _ = jax.lax.scan(
+            body, (w_hat, scen_carry), (ts, etas, valid))
+
+        t_sync = ts[-1]
+        ch_keys = jax.vmap(
+            lambda i: stream_key(base, TAG_CHANNEL, t_sync, i))(dev_ids)
+        ch = jax.vmap(lambda c, k: sample_from_carry(scn, consts, c, k))(
+            scen_carry, ch_keys)
+        if scn.has_dropout:
+            drop = dropout_mask(scn, base, t_sync, dev_ids)
+            ch = ch._replace(up=ch.up & ~drop[:, None])
+        delta = anchor - jax.vmap(flatten_tree)(w_hat)   # (M, D)
+
+        if mode == "fedavg":
+            # dense, no error feedback; with every channel down (burst
+            # outage / dropout) the upload is simply lost -- no bytes,
+            # no update, and nothing carried over (FedAvg has no EF).
+            # The outage mask is applied as exact where-selects AFTER
+            # the unchanged cost expressions: weaving it into the float
+            # chain (e.g. nbytes * any_up) lets XLA:CPU pick batch-
+            # shape-dependent FMA fusions and breaks the sharded
+            # bit-identity on the cost fields by ulps.
+            any_up = jnp.any(ch.up, axis=1)
+            g = jnp.where(any_up[:, None], delta, 0.0)
+            ef_new = ef
+            bw = ch.bandwidth_mb_s * ch.up
+            best = jnp.argmax(bw, axis=1)
+            nbytes = (jax.nn.one_hot(best, n_ch, dtype=jnp.float32)
+                      * (d * vb))
+            uplink_bytes = jnp.where(any_up, jnp.sum(nbytes, axis=1),
+                                     0.0)
+        else:
+            recv = ch.up[:, :n_ch]
+            g, ef_new = compress(ef, delta, ks_mat, recv, k_cap)
+            if mode == "lgc_q8":
+                kq = jax.vmap(lambda i: stream_key(
+                    base, TAG_QUANT, t_sync, i))(dev_ids)
+                q, scale = jax.vmap(qsgd_quantize)(g, kq)
+                g_deq = jax.vmap(qsgd_dequantize)(q, scale)
+                # quantization residual stays in the error memory
+                ef_new = ef_new + (g - g_deq)
+                g = g_deq
+            vbytes = 1 if mode == "lgc_q8" else vb
+            nbytes = (ks_mat.astype(jnp.float32) * (vbytes + ib)
+                      * recv.astype(jnp.float32))
+            uplink_bytes = jnp.sum(nbytes, axis=1)
+
+        comm = comm_cost_mb(ch, nbytes / 1e6)            # dict of (M,)
+        # byte counts are integer-valued (exact in f32 below 2^24), so the
+        # host-side f64 accumulation matches the loop engine bitwise
+        costs = jnp.stack([comm["energy_j"], comm["money"],
+                           comm["time_s"], uplink_bytes], 1)
+        costs = jnp.where(sync_mask[:, None], costs, 0.0)
+
+        g_masked = jnp.where(sync_mask[:, None], g, 0.0)
+        ef = jnp.where(sync_mask[:, None], ef_new, ef)
+        return w_hat, scen_carry, g_masked, ef, costs
+
+    return device_phase
+
+
 class BatchedEngine:
     """Drives one :class:`~repro.core.fl.LGCSimulator` with stacked state.
 
@@ -139,127 +274,33 @@ class BatchedEngine:
     # -- the one-XLA-program sync window ------------------------------------
     def _make_window(self, axis_name: str | None = None,
                      server_reduce: str = "gather"):
-        """Build the window program.
+        """Build the window program: the shared device phase
+        (:func:`make_device_phase`) composed with the server aggregation and
+        the global-model broadcast.
 
         With ``axis_name`` set the returned function is a ``shard_map`` body:
         every (M, .) argument arrives as its local (M/D, .) block, ``dev_ids``
         carries the *global* device indices of the block (so the counter-based
         key streams are shard-layout independent), and the server aggregation
         crosses the mesh axis per ``server_reduce``.
+
+        A window with an all-false sync_mask degrades to a bitwise no-op on
+        params/anchor/ef with zero costs, so one program serves sync and
+        record-only windows alike.
         """
-        sim, cfg = self.sim, self.sim.cfg
-        loss_fn = sim.task.loss_fn
-        base = sim._base
-        m, d, n_ch = self.m, self.d, self.n_ch
-        mode, backend = sim.mode, sim.backend
-        bsz = cfg.batch_size
-        vb, ib = cfg.value_bytes, cfg.index_bytes
-        consts = stack_specs(cfg.channels)
-        scn = sim.scenario
-
-        def local_round(w_hat, t, eta, valid, data, n_dev, dev_ids):
-            keys = jax.vmap(lambda i: stream_key(base, TAG_BATCH, t, i))(
-                dev_ids)
-
-            def dev(w, key, n, rows):
-                # gather bounded by the device's true row count n, so the
-                # zero-padding rows of the stacked shards are never sampled
-                idx = jax.random.randint(key, (bsz,), 0, n)
-                batch = jax.tree_util.tree_map(lambda a: a[idx], rows)
-                grads = jax.grad(loss_fn)(w, batch)
-                # padded scan steps (valid=False) leave w bitwise untouched
-                return jax.tree_util.tree_map(
-                    lambda p, gi: jnp.where(valid, p - eta * gi, p), w, grads)
-            return jax.vmap(dev)(w_hat, keys, n_dev, data)
-
-        def compress(ef, delta, ks_mat, recv, k_cap):
-            """(g, ef_new) for all devices; layered EF, backend-dispatched."""
-            if backend == "pallas":
-                from repro.kernels import lgc_compress_hist
-                cum = jnp.cumsum(ks_mat, axis=1)
-                return jax.vmap(
-                    lambda e, dl, ck, rc: lgc_compress_hist(
-                        e, dl, ck, rc.astype(jnp.int32)))(
-                    ef, delta, cum, recv)
-            u = ef + delta
-            g = jax.vmap(
-                lambda ui, ki, ri: lgc_compress_topk(ui, ki, ri, k_cap))(
-                u, ks_mat, recv)
-            return g, u - g
+        sim = self.sim
+        m = self.m
+        device_phase = make_device_phase(
+            cfg=sim.cfg, loss_fn=sim.task.loss_fn, base=sim._base,
+            mode=sim.mode, backend=sim.backend, scenario=sim.scenario,
+            d=self.d, n_ch=self.n_ch)
 
         def window(params, w_hat, anchor, ef, scen_carry, data,
                    n_dev, dev_ids, ts, etas, valid, sync_mask, ks_mat, *,
                    k_cap):
-            """ts/etas/valid: (L,) round indices, step sizes, padding mask
-            (L is padded to a power of two so few scan programs compile);
-            ks_mat: (M, C); scen_carry: (M, .) scenario chain state, advanced
-            one step per valid scanned round (padded steps leave it bitwise
-            untouched).  A window with an all-false sync_mask degrades
-            to a bitwise no-op on params/anchor/ef with zero costs, so one
-            program serves sync and record-only windows alike."""
-            def body(state, sc):
-                w, carry = state
-                t, eta, v = sc
-                w = local_round(w, t, eta, v, data, n_dev, dev_ids)
-                carry = jax.vmap(
-                    lambda c, i: step_carry(scn, base, c, t, i, v))(
-                    carry, dev_ids)
-                return (w, carry), None
-            (w_hat, scen_carry), _ = jax.lax.scan(
-                body, (w_hat, scen_carry), (ts, etas, valid))
-
-            t_sync = ts[-1]
-            ch_keys = jax.vmap(
-                lambda i: stream_key(base, TAG_CHANNEL, t_sync, i))(dev_ids)
-            ch = jax.vmap(lambda c, k: sample_from_carry(scn, consts, c, k))(
-                scen_carry, ch_keys)
-            if scn.has_dropout:
-                drop = dropout_mask(scn, base, t_sync, dev_ids)
-                ch = ch._replace(up=ch.up & ~drop[:, None])
-            delta = anchor - jax.vmap(flatten_tree)(w_hat)   # (M, D)
-
-            if mode == "fedavg":
-                # dense, no error feedback; with every channel down (burst
-                # outage / dropout) the upload is simply lost -- no bytes,
-                # no update, and nothing carried over (FedAvg has no EF).
-                # The outage mask is applied as exact where-selects AFTER
-                # the unchanged cost expressions: weaving it into the float
-                # chain (e.g. nbytes * any_up) lets XLA:CPU pick batch-
-                # shape-dependent FMA fusions and breaks the sharded
-                # bit-identity on the cost fields by ulps.
-                any_up = jnp.any(ch.up, axis=1)
-                g = jnp.where(any_up[:, None], delta, 0.0)
-                ef_new = ef
-                bw = ch.bandwidth_mb_s * ch.up
-                best = jnp.argmax(bw, axis=1)
-                nbytes = (jax.nn.one_hot(best, n_ch, dtype=jnp.float32)
-                          * (d * vb))
-                uplink_bytes = jnp.where(any_up, jnp.sum(nbytes, axis=1),
-                                         0.0)
-            else:
-                recv = ch.up[:, :n_ch]
-                g, ef_new = compress(ef, delta, ks_mat, recv, k_cap)
-                if mode == "lgc_q8":
-                    kq = jax.vmap(lambda i: stream_key(
-                        base, TAG_QUANT, t_sync, i))(dev_ids)
-                    q, scale = jax.vmap(qsgd_quantize)(g, kq)
-                    g_deq = jax.vmap(qsgd_dequantize)(q, scale)
-                    # quantization residual stays in the error memory
-                    ef_new = ef_new + (g - g_deq)
-                    g = g_deq
-                vbytes = 1 if mode == "lgc_q8" else vb
-                nbytes = (ks_mat.astype(jnp.float32) * (vbytes + ib)
-                          * recv.astype(jnp.float32))
-                uplink_bytes = jnp.sum(nbytes, axis=1)
-
-            comm = comm_cost_mb(ch, nbytes / 1e6)            # dict of (M,)
-            # byte counts are integer-valued (exact in f32 below 2^24), so the
-            # host-side f64 accumulation matches the loop engine bitwise
-            costs = jnp.stack([comm["energy_j"], comm["money"],
-                               comm["time_s"], uplink_bytes], 1)
-            costs = jnp.where(sync_mask[:, None], costs, 0.0)
-
-            g_masked = jnp.where(sync_mask[:, None], g, 0.0)
+            w_hat, scen_carry, g_masked, ef, costs = device_phase(
+                w_hat, anchor, ef, scen_carry, data, n_dev, dev_ids,
+                ts, etas, valid, sync_mask, ks_mat, k_cap=k_cap)
             if axis_name is None:
                 g_sum = jnp.sum(g_masked, axis=0)
             elif server_reduce == "gather":
@@ -281,7 +322,6 @@ class BatchedEngine:
                     wl),
                 w_hat, new_params)
             anchor = jnp.where(sync_mask[:, None], new_flat[None], anchor)
-            ef = jnp.where(sync_mask[:, None], ef_new, ef)
             return new_params, w_hat, anchor, ef, scen_carry, costs
 
         return window

@@ -1,0 +1,458 @@
+"""Population-scale cohort sampling: N >= 100k devices, M-device windows.
+
+LGC's premise is an edge network of *millions* of devices, but the engines in
+:mod:`repro.core.fl` / :mod:`repro.core.fl_batched` run full participation
+with M in the tens.  This module adds the population layer of the engine
+ladder: a :class:`Population` holds host-resident per-device state for all N
+devices -- error-feedback residuals behind a pluggable store
+(:data:`repro.core.error_feedback.EF_STORES`: "dense" | "int8" | "server"),
+scenario chain carries, resource spend -- and :func:`run_population` draws a
+cohort of M devices per sync window, gathers their state into the (M, .)
+stacked pytrees the batched window body already consumes, runs the unchanged
+:func:`repro.core.fl_batched.make_device_phase`, and scatters the updated
+state back.
+
+Cohort contract (docs/ARCHITECTURE.md §8).  Windows are synchronous: every
+window spans ``h`` rounds, the whole cohort syncs at its end, and the next
+window re-draws.  The cohort is drawn by :func:`sample_cohort` from the
+counter-based TAG_COHORT stream keyed by the window's *start round* only --
+never by device position or mesh layout -- so the draw is deterministic per
+(seed, round) and identical under any engine/mesh
+(tests/test_population.py::TestCohortSampling).  Samplers are registry
+entries (:data:`COHORT_SAMPLERS`): "uniform", and Jung-et-al.-2024-style
+"weighted" biased selection where zero-weight devices are never drawn.
+Cohort members start each window from the freshly broadcast global model;
+their scenario chains advance only during rounds they participate in
+("participation time"), keyed by (global round, global device id) like every
+other stream.
+
+Equivalence.  All population engines ("loop" | "batched" | "sharded") run
+the SAME compiled device phase -- at block sizes 1, M and M/D respectively
+-- and feed the assembled (M, D) update matrix through one shared jitted
+server step, so the sampled-cohort ladder holds *bitwise* for the dense EF
+store and allclose within pinned tolerance for the int8 store
+(tests/test_population.py::TestPopulationEquivalence; the bitwise half
+rests on the batch-shape stability of per-row float math on XLA:CPU,
+docs/ARCHITECTURE.md §4).
+
+Data at population scale is a fixed pool of shards: global device id i
+reads shard ``i % n_shards`` (:func:`repro.data.partition.shard_for_device`)
+while drawing its own TAG_BATCH minibatch stream, so no N-sized data
+structure ever materializes.  :func:`make_population_task` builds a
+self-contained synthetic classification task small enough that a dense
+100k-device EF store fits in tens of MB (benchmarks/bench_population.py
+measures all three stores into BENCH_population.json).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .channels import DEFAULT_CHANNELS, comp_cost
+from .compressor import flatten_tree, tree_size, unflatten_like
+from .error_feedback import EF_STORES, make_ef_store
+from .fl import (FLConfig, FLTask, History, TAG_COHORT, TAG_EVAL,
+                 get_scenario, stream_key)
+from .fl_batched import _stack_device_data, make_device_phase
+from .scenario import Scenario, ScenarioCarry, init_carry
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# cohort samplers (registry; counter-based TAG_COHORT stream)
+# ---------------------------------------------------------------------------
+
+def _sample_uniform(key: Array, n: int, m: int,
+                    weights: np.ndarray | None) -> Array:
+    return jax.random.choice(key, n, (m,), replace=False)
+
+
+def _sample_weighted(key: Array, n: int, m: int,
+                     weights: np.ndarray | None) -> Array:
+    if weights is None:
+        raise ValueError("'weighted' sampler needs per-device weights")
+    p = jnp.asarray(weights, jnp.float32)
+    return jax.random.choice(key, n, (m,), replace=False, p=p / jnp.sum(p))
+
+
+COHORT_SAMPLERS: dict[str, Callable] = {
+    # every device equally likely (classic FedAvg client sampling)
+    "uniform": _sample_uniform,
+    # biased/resource-aware selection (Jung et al. 2024): draw proportional
+    # to non-negative per-device weights; zero-weight devices never appear
+    "weighted": _sample_weighted,
+}
+
+
+def sample_cohort(base: Array, sampler: str, n: int, m: int, t: int,
+                  weights: np.ndarray | None = None) -> np.ndarray:
+    """Draw the M-device cohort for the window starting at round ``t``.
+
+    Keyed by ``stream_key(base, TAG_COHORT, t)`` alone -- a pure function of
+    (seed, round), independent of engine blocking and mesh layout -- and
+    without replacement, so ids are unique and scatters conflict-free.
+    Returns global device ids as an (M,) int64 numpy array, in draw order
+    (all engines consume the same order, which fixes the server reduce
+    order)."""
+    if not 0 < m <= n:
+        raise ValueError(f"cohort size {m} not in 1..{n}")
+    try:
+        fn = COHORT_SAMPLERS[sampler]
+    except KeyError:
+        raise ValueError(f"unknown cohort sampler {sampler!r}; registered: "
+                         f"{sorted(COHORT_SAMPLERS)}") from None
+    if weights is not None:
+        w = np.asarray(weights, np.float64)
+        if w.shape != (n,):
+            raise ValueError(f"weights shape {w.shape} != ({n},)")
+        if (w < 0).any() or w.sum() <= 0:
+            raise ValueError("weights must be non-negative with positive sum")
+        if sampler == "weighted" and m > int((w > 0).sum()):
+            raise ValueError(f"cohort size {m} exceeds the "
+                             f"{int((w > 0).sum())} positive-weight devices")
+    ids = fn(stream_key(base, TAG_COHORT, t), n, m, weights)
+    return np.asarray(ids, np.int64)
+
+
+# ---------------------------------------------------------------------------
+# the population: host-resident per-device state for all N devices
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Population:
+    """All-N device state; windows gather/scatter M-device cohorts of it.
+
+    Built by :func:`make_population`.  Per-device state lives on the host:
+    the EF residual store (``ef_store``, one of :data:`EF_STORES`), the
+    scenario chain carries, f64 resource spend and participation counts.
+    ``task.device_data`` is the fixed shard pool -- device i reads shard
+    ``i % n_shards``."""
+    task: FLTask
+    n: int
+    scenario: Scenario
+    ef_store: object
+    sampler: str
+    weights: np.ndarray | None
+    seed: int
+    d: int
+    # host state pools, all indexed by global device id
+    carry_bw: np.ndarray        # (N, C) f32 AR(1) log-bandwidth deviation
+    carry_good: np.ndarray      # (N, C) bool Gilbert-Elliott state
+    spend: np.ndarray           # (N, 4) f64: energy_j, money, time_s, mb
+    participation: np.ndarray   # (N,) int64 windows participated
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.task.device_data)
+
+    @property
+    def ef_nbytes(self) -> int:
+        """Exact EF-state footprint (stores allocate upfront, so this is
+        also the peak)."""
+        return self.ef_store.nbytes
+
+
+def make_population(task: FLTask, n_devices: int, ef_store: str = "dense",
+                    sampler: str = "uniform",
+                    weights: np.ndarray | None = None,
+                    scenario: str | Scenario | None = None,
+                    seed: int = 0,
+                    n_channels: int = len(DEFAULT_CHANNELS)) -> Population:
+    """Build an N-device :class:`Population` over ``task``'s shard pool.
+
+    ``ef_store``: "dense" (lossless, 4*N*D bytes), "int8" (N*(D+4) bytes,
+    quantized residuals) or "server" (4*D bytes, one aggregate residual) --
+    see :data:`repro.core.error_feedback.EF_STORES`.  ``sampler`` /
+    ``weights`` configure :func:`sample_cohort`.  The scenario chain carries
+    of all N devices are stationary-initialized from the same TAG_SCEN_INIT
+    stream the full-participation engines use, keyed by global device id.
+    """
+    if n_devices < len(task.device_data):
+        raise ValueError(f"population of {n_devices} smaller than the "
+                         f"{len(task.device_data)}-shard data pool")
+    if ef_store not in EF_STORES:
+        raise ValueError(f"unknown EF store {ef_store!r}; registered: "
+                         f"{sorted(EF_STORES)}")
+    if sampler not in COHORT_SAMPLERS:
+        raise ValueError(f"unknown cohort sampler {sampler!r}; registered: "
+                         f"{sorted(COHORT_SAMPLERS)}")
+    scn = get_scenario(scenario)
+    d = tree_size(task.init(jax.random.PRNGKey(seed)))
+    base = jax.random.PRNGKey(seed + 1)
+    ids = jnp.arange(n_devices, dtype=jnp.int32)
+    carry = jax.vmap(lambda i: init_carry(scn, base, i, n_channels))(ids)
+    if weights is not None:
+        weights = np.asarray(weights, np.float64)
+        if weights.shape != (n_devices,):
+            raise ValueError(
+                f"weights shape {weights.shape} != ({n_devices},)")
+    return Population(
+        task=task, n=n_devices, scenario=scn,
+        ef_store=make_ef_store(ef_store, n_devices, d),
+        sampler=sampler, weights=weights, seed=seed, d=d,
+        carry_bw=np.array(carry.bw_log),     # np.array: writable host copies
+        carry_good=np.array(carry.good),
+        spend=np.zeros((n_devices, 4), np.float64),
+        participation=np.zeros((n_devices,), np.int64))
+
+
+# ---------------------------------------------------------------------------
+# a population-sized task: tiny synthetic classification over a shard pool
+# ---------------------------------------------------------------------------
+
+def make_population_task(n_shards: int = 8, n_train: int = 4096,
+                         n_eval: int = 1024, n_features: int = 16,
+                         n_classes: int = 4, seed: int = 0,
+                         partition: str = "iid",
+                         alpha: float = 0.5) -> FLTask:
+    """Synthetic Gaussian-blob logistic regression sized for N >= 100k.
+
+    D = (n_features + 1) * n_classes = 68 at the defaults, so a dense
+    100k-device EF store is ~27 MB (vs ~3 GB at MNIST-LR size) and the int8
+    store lands at (D + 4) / (4 D) ~ 26% of dense.  Data is partitioned into
+    ``n_shards`` pool shards (``partition``: "iid" | "noniid" | "dirichlet"
+    | "quantity") that the population maps device ids onto via
+    :func:`repro.data.partition.shard_for_device`."""
+    from .scenario import partition_fn
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_classes, n_features)) * 3.0
+    y = rng.integers(0, n_classes, size=n_train + n_eval)
+    x = centers[y] + rng.normal(size=(y.size, n_features))
+    x = x.astype(np.float32)
+    y = y.astype(np.int32)
+    xt, yt = x[:n_train], y[:n_train]
+    xe, ye = x[n_train:], y[n_train:]
+    scn = Scenario(name="population_task", partition=partition, alpha=alpha)
+    shards = partition_fn(scn)(xt, yt, n_shards, seed)
+
+    def init(key):
+        k1, _ = jax.random.split(key)
+        return {"w": jax.random.normal(k1, (n_features, n_classes)) * 0.01,
+                "b": jnp.zeros((n_classes,))}
+
+    def logits(params, xb):
+        return xb @ params["w"] + params["b"]
+
+    def loss_fn(params, batch):
+        xb, yb = batch
+        logp = jax.nn.log_softmax(logits(params, xb), -1)
+        return -jnp.mean(jnp.take_along_axis(logp, yb[..., None], -1))
+
+    def metric_fn(params, batch):
+        xb, yb = batch
+        pred = jnp.argmax(logits(params, xb), -1)
+        return jnp.mean((pred == yb).astype(jnp.float32))
+
+    return FLTask(init=init, loss_fn=loss_fn, metric_fn=metric_fn,
+                  device_data=shards, eval_data=(xe, ye),
+                  name=f"population_blobs_{n_features}x{n_classes}")
+
+
+# ---------------------------------------------------------------------------
+# the cohort window loop
+# ---------------------------------------------------------------------------
+
+def _pad_pow2(t: int, te: int, eta_fn) -> tuple[Array, Array, Array]:
+    """(ts, etas, valid) for rounds [t, te), padded to a power of two so few
+    scan programs compile -- same rule as BatchedEngine.run."""
+    length = te - t
+    pad = (1 << (length - 1).bit_length()) - length
+    ts = jnp.asarray(list(range(t, te)) + [te - 1] * pad, jnp.int32)
+    etas = jnp.asarray([eta_fn(tt) for tt in range(t, te)] + [0.0] * pad,
+                       jnp.float32)
+    valid = jnp.asarray([True] * length + [False] * pad)
+    return ts, etas, valid
+
+
+def run_population(pop: Population, cfg: FLConfig, mode: str = "lgc",
+                   h: int = 4, ks: Sequence[int] | None = None,
+                   m_cohort: int = 64, engine: str = "batched",
+                   backend: str | None = None, mesh=None) -> History:
+    """Run sampled-cohort LGC over ``pop`` and return a :class:`History`.
+
+    Every window: draw M = ``m_cohort`` devices (:func:`sample_cohort`),
+    gather their EF residuals / scenario carries / data shards into (M, .)
+    stacks, broadcast the global model, run ``h`` local rounds plus the sync
+    through the shared :func:`~repro.core.fl_batched.make_device_phase`,
+    apply the cohort-mean server update, scatter state back.
+
+    ``engine`` picks the blocking of the SAME device-phase program: "batched"
+    (one (M, .) block), "loop" (M single-row blocks -- the reference), or
+    "sharded" ((M/D, .) mesh-local blocks under shard_map).  All three
+    produce bit-identical History with the dense EF store (the sampled-cohort
+    equivalence contract, tests/test_population.py)."""
+    if engine not in ("batched", "loop", "sharded"):
+        raise ValueError(f"unknown population engine {engine!r}")
+    if cfg.seed != pop.seed:
+        raise ValueError(f"cfg.seed={cfg.seed} but the population was built "
+                         f"with seed={pop.seed}; streams would diverge")
+    cfg_scn = get_scenario(cfg.scenario)
+    if cfg_scn.name not in ("static", pop.scenario.name):
+        raise ValueError(
+            f"cfg.scenario={cfg_scn.name!r} conflicts with the population's "
+            f"{pop.scenario.name!r}; pass the scenario to make_population")
+    task, scn = pop.task, pop.scenario
+    backend = backend or cfg.backend
+    params = task.init(jax.random.PRNGKey(cfg.seed))
+    d = pop.d
+    n_ch = len(cfg.channels)
+    if pop.carry_bw.shape[1] != n_ch:
+        raise ValueError(
+            f"population carries cover {pop.carry_bw.shape[1]} channels but "
+            f"cfg has {n_ch}; pass n_channels to make_population")
+    base = jax.random.PRNGKey(cfg.seed + 1)
+    if ks is None:
+        k_total = max(1, d // 20)                  # 5% sparsity default
+        ks = [k_total // 2, k_total // 4,
+              k_total - k_total // 2 - k_total // 4]
+    ks = (list(ks) + [0] * n_ch)[:n_ch]
+    if mode == "topk":
+        ks = [sum(ks)] + [0] * (n_ch - 1)
+    k_cap = (1 if mode == "fedavg"
+             else min(d, 1 << (max(1, sum(ks)) - 1).bit_length()))
+    eta_fn = lambda t: cfg.lr * cfg.lr_decay_a / (cfg.lr_decay_a + t)
+
+    pool_data, pool_n = _stack_device_data(task.device_data)
+    n_shards = pop.n_shards
+
+    device_phase = make_device_phase(
+        cfg=cfg, loss_fn=task.loss_fn, base=base, mode=mode,
+        backend=backend, scenario=scn, d=d, n_ch=n_ch)
+    phase_jit = jax.jit(device_phase, static_argnames=("k_cap",))
+
+    # shared server half: one jitted program over the assembled (M, D)
+    # update matrix, identical for every engine blocking
+    @jax.jit
+    def _apply_server(params, g):
+        flat = flatten_tree(params) - jnp.sum(g, axis=0) / g.shape[0]
+        return unflatten_like(flat, params)
+
+    # shared keyed-subset eval (TAG_EVAL), mirroring LGCSimulator._record
+    xe, ye = (jnp.asarray(task.eval_data[0]), jnp.asarray(task.eval_data[1]))
+    n_eval = int(xe.shape[0])
+    n_take = min(2048, n_eval)
+
+    @jax.jit
+    def _eval_at(params, t):
+        key = stream_key(base, TAG_EVAL, t)
+        idx = jax.random.randint(key, (n_take,), 0, n_eval)
+        return (task.loss_fn(params, (xe[idx], ye[idx])),
+                task.metric_fn(params, (xe[idx], ye[idx])))
+
+    if engine == "sharded":
+        from jax.sharding import PartitionSpec as P
+
+        from repro.launch.compat import shard_map
+        from repro.launch.mesh import fl_axis_name, make_host_mesh
+        mesh = mesh if mesh is not None else make_host_mesh()
+        axis = fl_axis_name(mesh)
+        n_mesh = int(mesh.shape[axis])
+        if m_cohort % n_mesh != 0:
+            raise ValueError(f"cohort size {m_cohort} does not divide over "
+                             f"{n_mesh} mesh devices on axis {axis!r}")
+        shard, rep = P(axis), P()
+        # args: w_hat, anchor, ef, scen_carry, data, n_dev, dev_ids,
+        #       ts, etas, valid, sync_mask, ks_mat
+        in_specs = (shard, shard, shard, shard, shard, shard, shard,
+                    rep, rep, rep, shard, shard)
+        out_specs = (shard, shard, shard, shard, shard)
+        _programs: dict[tuple, Callable] = {}
+
+        def run_phase(*args):
+            sig = tuple(args[7].shape)          # window length -> program
+            fn = _programs.get(sig)
+            if fn is None:
+                fn = jax.jit(shard_map(
+                    functools.partial(device_phase, k_cap=k_cap),
+                    mesh=mesh, in_specs=in_specs, out_specs=out_specs))
+                _programs[sig] = fn
+            return fn(*args)
+    elif engine == "batched":
+        def run_phase(*args):
+            return phase_jit(*args, k_cap=k_cap)
+    else:                                       # "loop": single-row blocks
+        def run_phase(*args):
+            rows = []
+            for j in range(m_cohort):
+                blk = tuple(
+                    a if i in (7, 8, 9)         # ts/etas/valid are shared
+                    else jax.tree_util.tree_map(lambda x: x[j:j + 1], a)
+                    for i, a in enumerate(args))
+                rows.append(phase_jit(*blk, k_cap=k_cap))
+            return tuple(
+                jax.tree_util.tree_map(
+                    lambda *leaves: jnp.concatenate(leaves, axis=0), *parts)
+                for parts in zip(*rows))
+
+    hist = History()
+    sync_mask = jnp.ones((m_cohort,), bool)
+    ks_mat = jnp.broadcast_to(jnp.asarray(ks, jnp.int32)[None],
+                              (m_cohort, n_ch)) + 0
+    comp = comp_cost(scn.device_profile_at(0), h)
+    t = 0
+    while t < cfg.rounds:
+        te = min(t + h, cfg.rounds)
+        ids = sample_cohort(base, pop.sampler, pop.n, m_cohort, t,
+                            pop.weights)
+        shard_idx = jnp.asarray(ids % n_shards, jnp.int32)
+        data_c = jax.tree_util.tree_map(lambda a: a[shard_idx], pool_data)
+        n_dev_c = pool_n[shard_idx]
+        dev_ids = jnp.asarray(ids, jnp.int32)
+        flat0 = flatten_tree(params)
+        w_hat_c = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (m_cohort,) + a.shape) + 0,
+            params)
+        anchor_c = jnp.broadcast_to(flat0[None], (m_cohort, d)) + 0
+        ef_c = pop.ef_store.gather(ids)
+        carry_c = ScenarioCarry(jnp.asarray(pop.carry_bw[ids]),
+                                jnp.asarray(pop.carry_good[ids]))
+        ts, etas, valid = _pad_pow2(t, te, eta_fn)
+
+        _, carry_c, g, ef_c, costs = run_phase(
+            w_hat_c, anchor_c, ef_c, carry_c, data_c, n_dev_c, dev_ids,
+            ts, etas, valid, sync_mask, ks_mat)
+
+        params_before = params
+        params = _apply_server(params, g)
+
+        def _rec(r, p_at):
+            loss, acc = _eval_at(p_at, jnp.int32(r))
+            hist.step.append(r)
+            hist.loss.append(float(loss))
+            hist.accuracy.append(float(acc))
+            hist.energy_j.append(float(pop.spend[:, 0].sum()))
+            hist.money.append(float(pop.spend[:, 1].sum()))
+            hist.time_s.append(float(pop.spend[:, 2].max()))
+            hist.uplink_mb.append(float(pop.spend[:, 3].sum()))
+
+        # eval points falling mid-window precede this window's sync, so
+        # they are recorded against the pre-window params AND pre-window
+        # spend (same rule as BatchedEngine.run); the window-end point
+        # sees the new params and the window's costs
+        for r in range(t, te - 1):
+            if r % cfg.eval_every == 0 or r == cfg.rounds - 1:
+                _rec(r, params_before)
+
+        pop.ef_store.scatter(ids, ef_c)
+        pop.carry_bw[ids] = np.asarray(carry_c.bw_log)
+        pop.carry_good[ids] = np.asarray(carry_c.good)
+        pop.participation[ids] += 1
+        costs_np = np.asarray(costs, np.float64)
+        for j, i in enumerate(ids):
+            ccomp = (comp if scn.straggler is None
+                     else comp_cost(scn.device_profile_at(int(i)), h))
+            pop.spend[i, 0] += costs_np[j, 0] + ccomp["energy_j"]
+            pop.spend[i, 1] += costs_np[j, 1] + ccomp["money"]
+            pop.spend[i, 2] += costs_np[j, 2] + ccomp["time_s"]
+            pop.spend[i, 3] += costs_np[j, 3] / 1e6
+
+        if (te - 1) % cfg.eval_every == 0 or te - 1 == cfg.rounds - 1:
+            _rec(te - 1, params)
+        t = te
+    return hist

@@ -39,9 +39,22 @@ invariant extends to every scenario (tests/test_scenarios.py).
 
 ``FLConfig.scenario`` accepts a :class:`Scenario` or a registry name --
 see :data:`SCENARIOS` ("static", "markov_urban", "gilbert_flaky", ...).
-The carry-threading invariant and the TAG registry are documented in
-docs/ARCHITECTURE.md §3/§5; chain stationarity is pinned by
-tests/test_scenarios.py::TestChainStationarity.
+
+Invariants (and who enforces them):
+
+* every per-(round, device) stream is keyed by *global* device id through
+  :func:`stream_key`, never by shard-local position, so the same simulation
+  produces bit-identical variates on any mesh layout --
+  tests/test_scenarios.py (loop==batched==sharded per scenario) and
+  tests/test_population.py::TestCohortSampling (TAG_COHORT mesh invariance);
+* ``valid``-masked chain steps leave the carry bitwise untouched, so window
+  padding cannot desynchronize engines -- tests/test_scenarios.py;
+* chain marginals match their stationary distributions --
+  tests/test_scenarios.py::TestChainStationarity.
+
+The carry-threading contract and the TAG registry are documented in
+docs/ARCHITECTURE.md §3/§5; the population cohort stream (TAG_COHORT,
+keyed per sync window, not per device) in §8.
 """
 from __future__ import annotations
 
@@ -65,10 +78,10 @@ Array = jax.Array
 # stream tags: minibatch draws, channel realisations, eval subsets,
 # controller-reward eval subsets, QSGD dither, controller exploration noise,
 # controller replay sampling, scenario chain transitions, scenario chain
-# stationary init, sync-round device dropout
+# stationary init, sync-round device dropout, population cohort draws
 (TAG_BATCH, TAG_CHANNEL, TAG_EVAL, TAG_REWARD, TAG_QUANT,
  TAG_CTRL_NOISE, TAG_CTRL_SAMPLE, TAG_SCEN, TAG_SCEN_INIT,
- TAG_DROP) = range(10)
+ TAG_DROP, TAG_COHORT) = range(11)
 
 
 def stream_key(base: Array, tag: int, *ids) -> Array:
@@ -152,17 +165,26 @@ class Scenario:
         return d is not None and (d.base_prob > 0 or
                                   (d.flaky_every > 0 and d.flaky_prob > 0))
 
-    def device_profiles(self, m: int) -> list[DeviceProfile]:
-        """Per-device compute profiles with the straggler slowdown applied."""
+    def device_profile_at(self, i: int) -> DeviceProfile:
+        """Compute profile of *global* device ``i`` (straggler rule applied).
+
+        Keyed by global device id so population cohorts (which materialize
+        profiles only for the M sampled devices, never all N) agree with a
+        full-participation run over the same ids -- the same global-id rule
+        as :meth:`drop_probs` and the carry streams."""
         base = DeviceProfile()
         s = self.straggler
-        if s is None or s.slow_every <= 0 or s.slowdown == 1.0:
-            return [base] * m
-        slow = DeviceProfile(
+        if (s is None or s.slow_every <= 0 or s.slowdown == 1.0
+                or i % s.slow_every != 0):
+            return base
+        return DeviceProfile(
             name=f"{base.name}-straggler",
             comp_j_per_step=base.comp_j_per_step * s.slowdown,
             comp_time_per_step_s=base.comp_time_per_step_s * s.slowdown)
-        return [slow if i % s.slow_every == 0 else base for i in range(m)]
+
+    def device_profiles(self, m: int) -> list[DeviceProfile]:
+        """Per-device compute profiles with the straggler slowdown applied."""
+        return [self.device_profile_at(i) for i in range(m)]
 
     def drop_probs(self, dev_ids: Array) -> Array:
         """(M,) per-device sync-dropout probabilities from *global* device

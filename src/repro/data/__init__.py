@@ -9,7 +9,8 @@ tests/test_scenarios.py::TestPartitionerProperties, and the Shakespeare
 train/eval split disjointness by tests/test_tasks.py."""
 from .mnist import load_synthetic_mnist, partition_iid, partition_noniid
 from .partition import (label_marginals, partition_dirichlet,
-                        partition_quantity_skew, skew_score)
+                        partition_quantity_skew, shard_for_device,
+                        skew_score)
 from .shakespeare import (CHAR_VOCAB, VOCAB_SIZE, char_batches, char_shards,
                           char_windows, load_shakespeare, split_stream)
 from .tokens import TokenPipeline, synthetic_token_batch
@@ -17,7 +18,7 @@ from .tokens import TokenPipeline, synthetic_token_batch
 __all__ = [
     "load_synthetic_mnist", "partition_iid", "partition_noniid",
     "label_marginals", "partition_dirichlet", "partition_quantity_skew",
-    "skew_score",
+    "shard_for_device", "skew_score",
     "CHAR_VOCAB", "VOCAB_SIZE", "char_batches", "char_shards",
     "char_windows", "load_shakespeare", "split_stream",
     "TokenPipeline", "synthetic_token_batch",

@@ -15,6 +15,15 @@ Both are exact partitions -- every sample lands on exactly one device, no
 sample is lost or duplicated, every device is non-empty -- and fully
 deterministic per ``seed`` (``np.random.default_rng``).  These invariants
 are pinned by Hypothesis property tests in tests/test_scenarios.py.
+
+Population scale.  100k+ device populations do not materialize 100k shards:
+:mod:`repro.core.population` partitions into a fixed pool of ``n_shards``
+shards and maps every global device id onto one via
+:func:`shard_for_device` (``id % n_shards``).  The mapping is a pure
+function of the global id -- no RNG, no mesh-layout dependence -- so a
+sampled cohort reads the same data rows under any engine; pinned by the
+loop==batched population equivalence in
+tests/test_population.py::TestPopulationEquivalence.
 """
 from __future__ import annotations
 
@@ -93,6 +102,19 @@ def partition_quantity_skew(x: np.ndarray, y: np.ndarray, m: int,
     counts += 1
     cuts = np.cumsum(counts)[:-1]
     return [(x[np.sort(s)], y[np.sort(s)]) for s in np.split(perm, cuts)]
+
+
+def shard_for_device(dev_ids: np.ndarray, n_shards: int) -> np.ndarray:
+    """Map global device ids onto the population's fixed shard pool.
+
+    ``id % n_shards``: deterministic, id-keyed (shard-layout independent),
+    and surjective for any population with N >= n_shards -- every shard in
+    the pool backs ~N/n_shards devices.  Devices sharing a shard still draw
+    disjoint minibatch streams (TAG_BATCH is keyed per device id)."""
+    dev_ids = np.asarray(dev_ids)
+    if n_shards < 1:
+        raise ValueError(f"need at least one shard, got {n_shards}")
+    return dev_ids % n_shards
 
 
 def label_marginals(shards: Shards, n_classes: int | None = None

@@ -1,0 +1,238 @@
+"""Population layer invariants (docs/ARCHITECTURE.md §8).
+
+Three contracts are pinned here:
+
+* **Cohort sampling** (TestCohortSampling, property-based): every drawn id
+  is a valid unique global device id, zero-weight devices are never drawn,
+  and the draw is a pure function of (seed, window-start round) -- the
+  TAG_COHORT stream has no device or mesh-layout dependence, so any engine
+  blocking consumes the identical cohort.
+* **EF stores** (TestEFStores): dense gather/scatter roundtrips bitwise;
+  int8 decodes within max|e|/254 per element at <= 30% of dense bytes;
+  the server-side store broadcasts one shared residual and keeps the
+  cohort mean.
+* **Sampled-cohort equivalence** (TestPopulationEquivalence): at
+  N = 100k, M = 64, population loop == batched History is BIT-identical
+  with the dense store (static and gilbert_flaky scenarios), allclose
+  within pinned tolerance with the int8 store, and sharded == batched
+  bitwise on the present mesh -- the population rungs of the engine
+  ladder.  The CI test-sharded lane re-runs this file on a forced
+  8-device host mesh.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import FLConfig
+from repro.core.error_feedback import (EF_STORES, DenseEFStore, Int8EFStore,
+                                       ServerEFStore, make_ef_store)
+from repro.core.population import (COHORT_SAMPLERS, make_population,
+                                   make_population_task, run_population,
+                                   sample_cohort)
+from repro.core.scenario import TAG_COHORT, stream_key
+
+N_POP = 100_000
+M_COHORT = 64
+
+
+@pytest.fixture(scope="module")
+def task():
+    return make_population_task(n_shards=8, n_train=1024, seed=0)
+
+
+def _hist(task, *, ef_store="dense", scenario=None, engine="batched",
+          mesh=None, seed=0):
+    pop = make_population(task, N_POP, ef_store=ef_store, scenario=scenario)
+    cfg = FLConfig(rounds=8, eval_every=4, seed=seed,
+                   scenario=scenario or "static")
+    return run_population(pop, cfg, "lgc", h=4, m_cohort=M_COHORT,
+                          engine=engine, mesh=mesh).asdict()
+
+
+class TestCohortSampling:
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(min_value=100, max_value=5000),
+           st.integers(min_value=1, max_value=64),
+           st.integers(min_value=0, max_value=1000))
+    def test_ids_valid_and_unique(self, n, m, t):
+        base = jax.random.PRNGKey(7)
+        ids = sample_cohort(base, "uniform", n, min(m, n), t)
+        assert ids.min() >= 0 and ids.max() < n
+        assert len(set(ids.tolist())) == len(ids)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(min_value=0, max_value=10_000),
+           st.integers(min_value=0, max_value=99))
+    def test_deterministic_per_seed_round(self, seed, t):
+        base = jax.random.PRNGKey(seed)
+        a = sample_cohort(base, "uniform", 4096, 32, t)
+        b = sample_cohort(base, "uniform", 4096, 32, t)
+        assert (a == b).all()
+
+    def test_round_changes_draw(self):
+        base = jax.random.PRNGKey(0)
+        a = sample_cohort(base, "uniform", 4096, 32, 0)
+        b = sample_cohort(base, "uniform", 4096, 32, 4)
+        assert not (np.sort(a) == np.sort(b)).all()
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(min_value=0, max_value=500))
+    def test_zero_weights_never_drawn(self, t):
+        n = 2048
+        w = np.ones(n)
+        w[::2] = 0.0                       # every even device excluded
+        ids = sample_cohort(jax.random.PRNGKey(3), "weighted", n, 64, t, w)
+        assert (ids % 2 == 1).all()
+
+    def test_keyed_by_seed_and_round_only(self):
+        """The draw is reproducible straight from the TAG_COHORT stream --
+        no device ids, no mesh state, no consumption order feed into the
+        key, which is what makes the cohort mesh-layout invariant (the
+        sharded==batched population test exercises the full window)."""
+        base = jax.random.PRNGKey(11)
+        ids = sample_cohort(base, "uniform", 4096, 32, 17)
+        expect = jax.random.choice(stream_key(base, TAG_COHORT, 17),
+                                   4096, (32,), replace=False)
+        assert (ids == np.asarray(expect)).all()
+
+    def test_weighted_matches_weight_ratios(self):
+        n = 1000
+        w = np.ones(n)
+        w[:100] = 9.0                      # 10% of devices, 50% of mass
+        counts = np.zeros(n)
+        base = jax.random.PRNGKey(5)
+        for t in range(200):
+            counts[sample_cohort(base, "weighted", n, 32, t, w)] += 1
+        heavy = counts[:100].sum() / counts.sum()
+        assert 0.3 < heavy < 0.7           # loose: biased well above 10%
+
+    def test_rejects_bad_inputs(self):
+        base = jax.random.PRNGKey(0)
+        with pytest.raises(ValueError):
+            sample_cohort(base, "nope", 100, 10, 0)
+        with pytest.raises(ValueError):
+            sample_cohort(base, "uniform", 100, 101, 0)
+        with pytest.raises(ValueError):
+            sample_cohort(base, "weighted", 100, 10, 0, -np.ones(100))
+        with pytest.raises(ValueError):    # more draws than positive weights
+            sample_cohort(base, "weighted", 100, 10, 0,
+                          np.r_[np.ones(5), np.zeros(95)])
+
+    def test_registry_names(self):
+        assert set(COHORT_SAMPLERS) == {"uniform", "weighted"}
+        assert set(EF_STORES) == {"dense", "int8", "server"}
+
+
+class TestEFStores:
+    def test_dense_roundtrip_exact(self):
+        rng = np.random.default_rng(0)
+        store = DenseEFStore(100, 32)
+        ids = np.array([3, 17, 50, 99])
+        ef = rng.normal(size=(4, 32)).astype(np.float32)
+        store.scatter(ids, ef)
+        assert (np.asarray(store.gather(ids)) == ef).all()
+        # untouched rows stay zero
+        assert (np.asarray(store.gather(np.array([0, 1]))) == 0).all()
+
+    def test_int8_error_bound(self):
+        rng = np.random.default_rng(1)
+        store = Int8EFStore(100, 64)
+        ids = np.arange(10)
+        ef = (rng.normal(size=(10, 64)) * 10).astype(np.float32)
+        store.scatter(ids, ef)
+        dec = np.asarray(store.gather(ids))
+        bound = np.abs(ef).max(axis=1, keepdims=True) / 254.0
+        assert (np.abs(dec - ef) <= bound + 1e-7).all()
+
+    def test_int8_zero_row_safe(self):
+        store = Int8EFStore(4, 16)
+        store.scatter(np.array([2]), np.zeros((1, 16), np.float32))
+        assert (np.asarray(store.gather(np.array([2]))) == 0).all()
+
+    def test_int8_bytes_ratio(self):
+        n, d = 1000, 68                    # the population task's D
+        ratio = Int8EFStore(n, d).nbytes / DenseEFStore(n, d).nbytes
+        assert ratio <= 0.30
+        # the ratio is (D + 4) / (4 D): <= 30% for any D >= 20
+        assert Int8EFStore(n, 20).nbytes / DenseEFStore(n, 20).nbytes <= 0.30
+
+    def test_server_store_semantics(self):
+        store = ServerEFStore(1000, 8)
+        ids = np.array([1, 500, 999])
+        ef = np.arange(24, dtype=np.float32).reshape(3, 8)
+        store.scatter(ids, ef)
+        got = np.asarray(store.gather(np.array([7, 42])))
+        # every cohort row sees the same shared residual: the cohort mean
+        assert got.shape == (2, 8)
+        np.testing.assert_allclose(
+            got, np.broadcast_to(ef.mean(axis=0), (2, 8)))
+        assert store.nbytes == 8 * 4       # O(D), independent of N
+
+    def test_make_ef_store_rejects_unknown(self):
+        with pytest.raises(ValueError):
+            make_ef_store("float16", 10, 10)
+
+
+class TestPopulationEquivalence:
+    """The sampled-cohort rungs of the engine ladder at N=100k, M=64."""
+
+    @pytest.mark.parametrize("scenario", [None, "gilbert_flaky"])
+    def test_loop_matches_batched_bitwise_dense(self, task, scenario):
+        hb = _hist(task, engine="batched", scenario=scenario)
+        hl = _hist(task, engine="loop", scenario=scenario)
+        assert hb == hl                    # BIT-identical, dense EF store
+
+    def test_loop_matches_batched_int8_pinned_tol(self, task):
+        """Contract: allclose within 1e-6 for the quantized store (in
+        practice both engines decode the same codes, so it is bitwise --
+        the contract only promises the tolerance)."""
+        hb = _hist(task, engine="batched", ef_store="int8")
+        hl = _hist(task, engine="loop", ef_store="int8")
+        assert hb["step"] == hl["step"]
+        for k in ("loss", "accuracy", "energy_j", "money", "time_s",
+                  "uplink_mb"):
+            np.testing.assert_allclose(hb[k], hl[k], rtol=0, atol=1e-6)
+
+    def test_sharded_matches_batched_bitwise(self, task):
+        """On the present mesh (CI re-runs under a forced 8-device host
+        platform); M=64 divides any power-of-two device count."""
+        hb = _hist(task, engine="batched", scenario="gilbert_flaky")
+        hs = _hist(task, engine="sharded", scenario="gilbert_flaky")
+        assert hb == hs
+
+    def test_engine_and_seed_validation(self, task):
+        pop = make_population(task, 1000)
+        with pytest.raises(ValueError):
+            run_population(pop, FLConfig(rounds=4), engine="warp")
+        with pytest.raises(ValueError):
+            run_population(pop, FLConfig(rounds=4, seed=3))   # pop seed 0
+        with pytest.raises(ValueError):    # scenario mismatch
+            run_population(pop, FLConfig(rounds=4, scenario="gilbert_flaky"))
+
+
+class TestPopulationBehaviour:
+    def test_convergence_smoke(self, task):
+        pop = make_population(task, 20_000)
+        cfg = FLConfig(rounds=24, eval_every=8)
+        h = run_population(pop, cfg, "lgc", h=4, m_cohort=32)
+        assert h.loss[-1] < h.loss[0]
+        assert h.accuracy[-1] > 0.6
+        assert int(pop.participation.sum()) == 32 * 6   # 6 windows of 32
+        assert pop.participation.max() <= 6
+
+    def test_weighted_population_excludes_zero_weight(self, task):
+        n = 5000
+        w = np.ones(n)
+        w[: n // 2] = 0.0
+        pop = make_population(task, n, sampler="weighted", weights=w)
+        run_population(pop, FLConfig(rounds=8), "lgc", h=4, m_cohort=16)
+        assert pop.participation[: n // 2].sum() == 0
+        assert pop.participation[n // 2:].sum() == 16 * 2
+
+    def test_fedavg_mode_runs(self, task):
+        pop = make_population(task, 5000)
+        h = run_population(pop, FLConfig(rounds=8, eval_every=4), "fedavg",
+                           h=4, m_cohort=16)
+        assert len(h.step) == 3 and h.uplink_mb[-1] > 0
