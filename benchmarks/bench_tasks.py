@@ -11,17 +11,29 @@ with the compile-excluding chained-window pattern shared with
 flat float models can't hide (``wall_s`` keeps the end-to-end time,
 compile included, for reference).  Rows land in ``BENCH_tasks.json`` via
 ``benchmarks/run.py --smoke`` (CI uploads it as an artifact).
+
+``--profile`` switches to profiling mode: instead of the sweep it compiles
+one task's window program, writes the analysis/hlo_cost breakdown, the
+compile memory/aliasing stats (buffer donation visible as aliased output
+bytes) and a steady-window timing to a text artifact (CI uploads it from
+the bench-smoke lane; docs/ARCHITECTURE.md §10 reads one).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core import (FLConfig, FixedController, LGCSimulator,
                         run_baseline, tree_size)
+from repro.core.compressor import (LAYER_POLICIES, flatten_tree,
+                                   layer_budgets, per_layer_wire_bytes,
+                                   tree_layer_slices, wire_bytes)
 from repro.core.fl_batched import BatchedEngine
 from repro.models.paper_models import TASKS, make_task
 
@@ -36,6 +48,31 @@ _TASK_KW = {
     "cnn_mnist": dict(n_train=1200),
     "rnn_shakespeare": dict(n_train=2000, seq=32),
 }
+
+# the fixed steady-state traffic allocation (one layer per default channel)
+_STEADY_KS = [200, 300, 400]
+
+
+def _policy_wire_bytes(task, ks, cfg) -> dict:
+    """Bytes-on-wire of one sync upload per layer policy.
+
+    "global" is the flat sparse format (4-byte global indices); the
+    per-layer policies pay layer-local indices (ceil(log2(layer_size))
+    rounded up to bytes -- repro.core.compressor.per_layer_wire_bytes).
+    Budgets for the data-dependent policies come from a real update proxy:
+    one minibatch gradient at init on device 0's shard."""
+    params = task.init(jax.random.PRNGKey(0))
+    slices = tree_layer_slices(params)
+    d = tree_size(params)
+    batch = jax.tree_util.tree_map(lambda a: a[:64], task.device_data[0])
+    u = flatten_tree(jax.grad(task.loss_fn)(params, batch))
+    k_total = min(int(sum(ks)), d)
+    out = {"global": sum(wire_bytes(ks, cfg.value_bytes, cfg.index_bytes))}
+    for pol in sorted(LAYER_POLICIES):
+        b = layer_budgets(pol, u, slices, jnp.int32(k_total), d)
+        out[pol] = per_layer_wire_bytes(
+            [int(x) for x in np.asarray(b)], slices, cfg.value_bytes)
+    return out
 
 
 def run(tasks=None, m: int = 8, rounds: int = 40, batch_size: int = 32,
@@ -54,7 +91,7 @@ def run(tasks=None, m: int = 8, rounds: int = 40, batch_size: int = 32,
         # time everything after the first call (compile excluded), same
         # methodology as bench_sharded_scaling
         sim = LGCSimulator(task, cfg,
-                           [FixedController(4, [200, 300, 400])] * m,
+                           [FixedController(4, _STEADY_KS)] * m,
                            mode="lgc", engine="batched")
         eng = BatchedEngine(sim)
         rate, _ = _steady_window_rate(sim, eng, m, h=4,
@@ -66,6 +103,10 @@ def run(tasks=None, m: int = 8, rounds: int = 40, batch_size: int = 32,
             "final_loss": round(hist.loss[-1], 4),
             "final_accuracy": round(hist.accuracy[-1], 4),
             "uplink_mb": round(hist.uplink_mb[-1], 4),
+            # one sync upload's bytes on the wire, per layer policy (the
+            # per-layer formats pay layer-local indices; same k_total)
+            "wire_bytes_per_policy": _policy_wire_bytes(task, _STEADY_KS,
+                                                        cfg),
         })
         if emit_csv:
             emit(f"task_{name}", wall * 1e6 / rounds,
@@ -76,6 +117,69 @@ def run(tasks=None, m: int = 8, rounds: int = 40, batch_size: int = 32,
             "rows": rows}
 
 
+def profile(task_name: str = "cnn_mnist", m: int = 8, h: int = 4,
+            k_windows: int = 8, out: str | None = None) -> str:
+    """Profile one task's compiled window program; returns the report text.
+
+    Three sections, in the order a perf investigation reads them:
+
+    1. compile stats -- ``memory_analysis()`` including the output bytes
+       aliased to donated inputs (the buffer-donation satellite's receipt);
+    2. analysis/hlo_cost breakdown of the optimized HLO, top ops by
+       flops+bytes (what the program *should* cost);
+    3. steady-window timing with process CPU utilization (what it *does*
+       cost -- util well below 1.0 on a busy program means the runtime, not
+       the math, is the bottleneck; that signature is how the 740x scan
+       pathology in docs/ARCHITECTURE.md §10 was found).
+    """
+    from repro.analysis.hlo_cost import breakdown_hlo
+
+    task = make_task(task_name, m_devices=m, **_TASK_KW.get(task_name, {}))
+    cfg = FLConfig(rounds=4 * k_windows, eval_every=k_windows)
+    sim = LGCSimulator(task, cfg, [FixedController(h, _STEADY_KS)] * m,
+                       mode="lgc", engine="batched")
+    eng = BatchedEngine(sim)
+    sim._decide_devices(range(m), 0)
+    k_cap = eng._k_cap()
+    ts = jnp.arange(h, dtype=jnp.int32)
+    etas = jnp.asarray([sim._eta(t) for t in range(h)], jnp.float32)
+    ones = jnp.ones((h,), bool)
+    lowered = eng._window.lower(
+        sim.params, eng.w_hat, eng.anchor, eng.ef, eng.scen_carry,
+        eng.data, eng.n_dev, eng.dev_ids, ts, etas, ones,
+        jnp.ones((m,), bool), eng._ks_mat(), k_cap=k_cap)
+    compiled = lowered.compile()
+    lines = [f"window profile: task={task_name} m={m} h={h} "
+             f"d={sim.d} k_cap={k_cap}",
+             f"XLA_FLAGS={os.environ.get('XLA_FLAGS', '')!r}", ""]
+
+    lines.append("-- compile stats (donated-input aliasing) --")
+    mem = compiled.memory_analysis()
+    for attr in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "temp_size_in_bytes"):
+        val = getattr(mem, attr, None)
+        if val is not None:
+            lines.append(f"  {attr}: {val}")
+    lines.append("")
+
+    lines.append("-- hlo_cost breakdown (optimized HLO, top 20 op_names) --")
+    for op_name, cost in breakdown_hlo(compiled.as_text(), top=20):
+        lines.append(f"  {op_name:<40} flops={cost.flops:.3e} "
+                     f"bytes={cost.bytes:.3e}")
+    lines.append("")
+
+    lines.append("-- steady-window timing --")
+    rate, util = _steady_window_rate(sim, eng, m, h, k_windows)
+    lines.append(f"  device_steps_per_s: {rate:.1f}")
+    lines.append(f"  cpu_util: {util:.2f}")
+    report = "\n".join(lines) + "\n"
+    if out:
+        with open(out, "w") as f:
+            f.write(report)
+    return report
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=40)
@@ -83,7 +187,17 @@ def main():
     ap.add_argument("--tasks", default=None,
                     help="comma-separated registry names (default: all)")
     ap.add_argument("--out", default="BENCH_tasks.json")
+    ap.add_argument("--profile", metavar="TASK", default=None,
+                    help="profile one task's window program instead of "
+                         "sweeping; writes a text report to --out "
+                         "(default PROFILE_<task>.txt)")
     args = ap.parse_args()
+    if args.profile:
+        out = (args.out if args.out != "BENCH_tasks.json"
+               else f"PROFILE_{args.profile}.txt")
+        print(profile(args.profile, m=args.m, out=out), end="")
+        print(f"profile written to {out}")
+        return
     names = args.tasks.split(",") if args.tasks else None
     res = run(tasks=names, m=args.m, rounds=args.rounds)
     with open(args.out, "w") as f:

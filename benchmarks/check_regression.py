@@ -7,9 +7,16 @@ Two gates, each naming the metric and file that tripped:
   keyed by (mode, engine, M);
 * **task gate** -- the per-task ``device_steps_per_s`` rows of
   BENCH_tasks.json vs the committed BENCH_tasks_baseline.json, keyed by
-  (task, engine, M).  cnn_mnist runs at ~3.4 device-steps/s in the smoke
-  budget, one silent regression away from unusable, which is why tasks get
-  their own gate.
+  (task, engine, M).  cnn_mnist ran at ~3.4 device-steps/s in the smoke
+  budget before the §10 hot-path work, one silent regression away from
+  unusable, which is why tasks get their own gate;
+* **population gate** -- the per-EF-store rows of BENCH_population.json vs
+  BENCH_population_baseline.json, keyed by ef_store: ``ef_bytes_vs_dense``
+  must not grow past baseline * (1 + tolerance) (the compressed stores'
+  whole point is the memory ratio) and ``final_accuracy`` must not drop
+  more than ``tolerance`` absolute.  Throughput is deliberately not gated
+  here -- the population bench is dominated by host gather/scatter, too
+  noisy at smoke budgets.
 
 Exits nonzero when any matching row regresses more than ``--tolerance``
 (default 30%).  Rows present on only one side are reported but never fail
@@ -26,6 +33,7 @@ Refresh both (the recipe also lives in README.md's benchmarking section):
     python -m benchmarks.run --smoke
     cp BENCH_sim.json BENCH_baseline.json
     cp BENCH_tasks.json BENCH_tasks_baseline.json
+    cp BENCH_population.json BENCH_population_baseline.json
 """
 from __future__ import annotations
 
@@ -88,12 +96,51 @@ def check_tasks(baseline: dict, current: dict, tolerance: float
                  label="BENCH_tasks.json")
 
 
+def check_population(baseline: dict, current: dict, tolerance: float
+                     ) -> list[str]:
+    """Population gate: ef_bytes_vs_dense ratio + final_accuracy per
+    ef_store row of BENCH_population.json.  Prints every row with its
+    verdict so a trip names the exact store and metric."""
+    base_rows = {r["ef_store"]: r for r in baseline["rows"]}
+    failures = []
+    for r in current["rows"]:
+        key = r["ef_store"]
+        b = base_rows.get(key)
+        if b is None:
+            print(f"  new row (no baseline): ef_store={key}")
+            continue
+        ceil_ratio = b["ef_bytes_vs_dense"] * (1.0 + tolerance)
+        acc_floor = b["final_accuracy"] - tolerance
+        bad_bytes = r["ef_bytes_vs_dense"] > ceil_ratio + 1e-12
+        bad_acc = r["final_accuracy"] < acc_floor
+        verdict = "REGRESSED" if (bad_bytes or bad_acc) else "ok"
+        print(f"  {verdict:>9}: ef_store={key}  bytes_vs_dense "
+              f"{b['ef_bytes_vs_dense']:.4f} -> {r['ef_bytes_vs_dense']:.4f}"
+              f" (ceiling {ceil_ratio:.4f})  accuracy "
+              f"{b['final_accuracy']:.4f} -> {r['final_accuracy']:.4f}"
+              f" (floor {acc_floor:.4f})")
+        if bad_bytes:
+            failures.append(f"BENCH_population.json ef_bytes_vs_dense "
+                            f"ef_store={key}: {r['ef_bytes_vs_dense']:.4f} "
+                            f"> ceiling {ceil_ratio:.4f}")
+        if bad_acc:
+            failures.append(f"BENCH_population.json final_accuracy "
+                            f"ef_store={key}: {r['final_accuracy']:.4f} "
+                            f"< floor {acc_floor:.4f}")
+    for key in set(base_rows) - {r["ef_store"] for r in current["rows"]}:
+        print(f"  baseline row missing from current run: ef_store={key}")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_baseline.json")
     ap.add_argument("--current", default="BENCH_sim.json")
     ap.add_argument("--tasks-baseline", default="BENCH_tasks_baseline.json")
     ap.add_argument("--tasks-current", default="BENCH_tasks.json")
+    ap.add_argument("--population-baseline",
+                    default="BENCH_population_baseline.json")
+    ap.add_argument("--population-current", default="BENCH_population.json")
     ap.add_argument("--tolerance", type=float, default=0.30,
                     help="allowed fractional drop in device_steps_per_s")
     args = ap.parse_args()
@@ -117,6 +164,19 @@ def main() -> int:
     else:
         print(f"per-task gate skipped: {args.tasks_baseline} or "
               f"{args.tasks_current} not found")
+    if os.path.exists(args.population_baseline) and \
+            os.path.exists(args.population_current):
+        with open(args.population_baseline) as f:
+            pop_baseline = json.load(f)
+        with open(args.population_current) as f:
+            pop_current = json.load(f)
+        print(f"population gate: tolerance {args.tolerance:.0%} "
+              f"({args.population_baseline} vs {args.population_current})")
+        failures += check_population(pop_baseline, pop_current,
+                                     args.tolerance)
+    else:
+        print(f"population gate skipped: {args.population_baseline} or "
+              f"{args.population_current} not found")
     if failures:
         print("bench regression gate FAILED:")
         for f_ in failures:

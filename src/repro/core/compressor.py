@@ -193,6 +193,225 @@ def lgc_compress_traced(u: Array, ks: Array, received: Array) -> Array:
 
 
 # ---------------------------------------------------------------------------
+# per-model-layer budgets (structure-aware compression)
+# ---------------------------------------------------------------------------
+#
+# The LGC channel layers above rank coordinates *globally*: a conv kernel
+# competes with the fc matrix for the same top-k slots, and whole model
+# layers can go silent for rounds.  The per-layer path first allocates the
+# round's budget k_total across MODEL layers (the pytree leaves) under a
+# registered policy, selects the top-b_l coordinates inside each layer, and
+# only then splits the selected candidates across channels with the
+# unchanged magnitude layering -- following layer-divergence feedback
+# aggregation (arXiv:2404.08324) and FedGreen's fine-grained per-layer
+# compression (arXiv:2111.06146).
+#
+# Contract (tests/test_compressor.py::TestPerLayer):
+# * candidate masks of distinct layers are disjoint (they live in disjoint
+#   slices) and sum(budgets) == k_total for "uniform" always and for
+#   "size_prop" whenever k_total <= D;
+# * the "uniform" policy (uniform magnitude threshold across layers ==
+#   per-layer budgets set to the global top-k's per-layer hit counts) is
+#   BIT-equivalent to the global path: per_layer_compress(u, ...) equals
+#   lgc_compress_topk(u, ...) exactly, which is what lets
+#   FLConfig.layer_policy ride the engine-equivalence ladder.
+
+#: flat segments at least this large route through the Pallas kernels when
+#: ``backend="pallas"`` -- below it the (rows, 128) marshalling costs more
+#: than the kernel saves (ROADMAP item 2 measures the 10^8 regime)
+PALLAS_MIN_ELEMS = 100_000
+
+
+def tree_layer_slices(tree, skip_leading_axes: int = 0
+                      ) -> list[tuple[str, int, int]]:
+    """``(name, lo, hi)`` half-open slices of each pytree leaf inside the
+    :func:`flatten_tree` vector, in leaf order.
+
+    ``skip_leading_axes=1`` treats the leaves as stacked per-device state
+    ((M, ...) arrays) and describes the per-device flat vector -- the shape
+    the engines' compression rows actually have."""
+    leaves, _ = jax.tree_util.tree_flatten(tree)
+    paths = jax.tree_util.tree_leaves_with_path(tree)
+    out, lo = [], 0
+    for (path, leaf) in paths:
+        shape = leaf.shape[skip_leading_axes:]
+        n = 1
+        for s in shape:
+            n *= int(s)
+        name = jax.tree_util.keystr(path)
+        out.append((name, lo, lo + n))
+        lo += n
+    assert len(out) == len(leaves)
+    return out
+
+
+def _topb_mask(a: Array, b: Array, k_cap: int) -> Array:
+    """Boolean mask of the ``b`` largest entries of ``a`` (absolute values
+    already taken), ties split by ascending index -- the same stable-rank
+    semantics as :func:`lgc_compress_topk`'s ``rank_below``.  ``b`` is
+    traced, ``k_cap`` static with b <= k_cap."""
+    n = a.shape[0]
+    vals = jax.lax.top_k(a, min(k_cap, n))[0]
+    bc = jnp.clip(b, 1, vals.shape[0])
+    thr = vals[bc - 1]
+    gt = a > thr
+    eq = a == thr
+    tied_take = bc - jnp.sum(gt)
+    pos = jnp.cumsum(eq)
+    sel = gt | (eq & (pos <= tied_take))
+    sel = jnp.where(b > 0, sel, jnp.zeros_like(sel))
+    return jnp.where(b >= n, jnp.ones_like(sel), sel)
+
+
+def _largest_remainder(weights: Array, sizes: Array, k_total: Array) -> Array:
+    """Apportion ``k_total`` coordinates over layers proportionally to
+    ``weights``, by largest-remainder rounding, capped at layer sizes.
+
+    Exact (sum == k_total) whenever no layer's quota exceeds its size --
+    always true for size-proportional weights with k_total <= D; heavily
+    skewed divergence weights may undershoot after the cap (the remainder
+    pass hands out at most one extra coordinate per layer)."""
+    w = jnp.maximum(weights.astype(jnp.float32), 0.0)
+    tot = jnp.sum(w)
+    quota = jnp.where(tot > 0, k_total * w / jnp.where(tot > 0, tot, 1.0),
+                      k_total * sizes.astype(jnp.float32)
+                      / jnp.sum(sizes.astype(jnp.float32)))
+    base = jnp.minimum(jnp.floor(quota).astype(jnp.int32), sizes)
+    rem = k_total - jnp.sum(base)
+    frac = quota - jnp.floor(quota)
+    headroom = (sizes - base) > 0
+    # one extra coordinate to the `rem` layers with the largest remainders
+    # (index-ascending tie-break via argsort stability), headroom permitting
+    order = jnp.argsort(-jnp.where(headroom, frac, -1.0))
+    rank = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
+    extra = (rank < rem) & headroom
+    return base + extra.astype(jnp.int32)
+
+
+def layer_budgets(policy: str, u: Array,
+                  slices: Sequence[tuple[str, int, int]],
+                  k_total: Array, k_cap: int) -> Array:
+    """Per-model-layer coordinate budgets ``(L,) int32`` under ``policy``.
+
+    Policies (:data:`LAYER_POLICIES`):
+
+    * ``"uniform"``    -- one magnitude threshold across all layers: budgets
+      are the per-layer hit counts of the global top-``k_total`` selection,
+      so the induced compression is bit-equal to the global path.
+    * ``"size_prop"``  -- b_l proportional to layer size (every layer keeps
+      the same fraction of itself).
+    * ``"divergence"`` -- b_l proportional to the layer's update mass
+      ||u_l||_2 (layer-divergence feedback, arXiv:2404.08324): layers whose
+      accumulated update diverges most from the global model get the budget.
+    """
+    sizes = jnp.asarray([hi - lo for _, lo, hi in slices], jnp.int32)
+    if policy == "uniform":
+        mask = _topb_mask(jnp.abs(u), k_total, k_cap)
+        return jnp.asarray([jnp.sum(mask[lo:hi], dtype=jnp.int32)
+                            for _, lo, hi in slices])
+    if policy == "size_prop":
+        return _largest_remainder(sizes.astype(jnp.float32), sizes, k_total)
+    if policy == "divergence":
+        norms = jnp.asarray([jnp.sqrt(jnp.sum(u[lo:hi] ** 2))
+                             for _, lo, hi in slices])
+        return _largest_remainder(norms, sizes, k_total)
+    raise ValueError(f"unknown layer policy {policy!r}; registered: "
+                     f"{sorted(LAYER_POLICIES)}")
+
+
+#: registry of per-model-layer budget policies (see :func:`layer_budgets`)
+LAYER_POLICIES: dict[str, str] = {
+    "uniform": "global magnitude threshold (bit-equal to global top-k)",
+    "size_prop": "budgets proportional to layer size",
+    "divergence": "budgets proportional to layer update mass ||u_l||_2",
+}
+
+
+def per_layer_candidates(u: Array, slices: Sequence[tuple[str, int, int]],
+                         budgets: Array, k_cap: int) -> Array:
+    """Boolean candidate mask: top-``budgets[l]`` by |u| inside each layer
+    slice, stable-rank tie split per layer.  Masks of different layers are
+    disjoint by construction."""
+    a = jnp.abs(u)
+    parts = [_topb_mask(a[lo:hi], budgets[i], min(k_cap, hi - lo))
+             for i, (_, lo, hi) in enumerate(slices)]
+    return jnp.concatenate(parts)
+
+
+def per_layer_candidates_hist(u: Array,
+                              slices: Sequence[tuple[str, int, int]],
+                              budgets: Array,
+                              pallas_min_elems: int = PALLAS_MIN_ELEMS,
+                              interpret: bool = True) -> Array:
+    """Histogram-threshold candidate mask (the Pallas backend's selection).
+
+    Each layer's threshold comes from the 256-bin magnitude histogram --
+    the same 2-pass approximation :func:`repro.kernels.lgc_compress_hist`
+    uses for channel layers -- so selected counts are bin-granular, not
+    exact.  Layers with at least ``pallas_min_elems`` coordinates route
+    through the Pallas ``maxabs``/``histogram`` kernels (where the fused
+    row-blocked passes pay off); smaller layers use the bit-identical
+    :mod:`repro.kernels.ref` oracles, so the routing threshold never
+    changes the result (tests/test_kernels.py::TestPerLayerHistParity)."""
+    from repro.kernels import histogram, maxabs
+    from repro.kernels.ref import (hist_counts, hist_maxabs,
+                                   hist_thresholds)
+    parts = []
+    for i, (_, lo, hi) in enumerate(slices):
+        seg = u[lo:hi]
+        cum = budgets[i].reshape((1,)).astype(jnp.int32)
+        if hi - lo >= pallas_min_elems:
+            mx = maxabs(seg, interpret=interpret)
+            counts = histogram(seg, mx, interpret=interpret)
+            mx = mx.reshape(())
+        else:
+            mx = hist_maxabs(seg)
+            counts = hist_counts(seg, mx)
+        thr = hist_thresholds(counts, mx, cum)[0]
+        # strict > thr: same keep rule as ref.hist_layered_sparsify
+        parts.append((jnp.abs(seg) > thr) & (budgets[i] > 0))
+    return jnp.concatenate(parts)
+
+
+def per_layer_compress(u: Array, ks: Array, received: Array,
+                       slices: Sequence[tuple[str, int, int]],
+                       policy: str, k_cap: int) -> Array:
+    """Structure-aware LGC: per-layer budgets -> per-layer top-b_l candidate
+    mask -> the unchanged channel layering over the masked vector.
+
+    Under ``policy="uniform"`` this is bit-equal to
+    ``lgc_compress_topk(u, ks, received, k_cap)`` -- the candidate set is
+    exactly the global top-k_total, and every channel layer lives inside it
+    (tests/test_compressor.py::TestPerLayer).  Other policies reshape WHICH
+    coordinates compete, not how many: sum(ks) coordinates still cross the
+    channels, so the engines' byte accounting is policy-independent."""
+    k_total = jnp.sum(ks.astype(jnp.int32))
+    if policy == "uniform":
+        # shortcut: the global mask IS the union of the per-layer masks
+        mask = _topb_mask(jnp.abs(u), k_total, k_cap)
+    else:
+        budgets = layer_budgets(policy, u, slices, k_total, k_cap)
+        mask = per_layer_candidates(u, slices, budgets, k_cap)
+    return lgc_compress_topk(jnp.where(mask, u, 0.0), ks, received, k_cap)
+
+
+def per_layer_wire_bytes(budgets: Sequence[int],
+                         slices: Sequence[tuple[str, int, int]],
+                         value_bytes: int = 4) -> int:
+    """Bytes on the wire for the per-layer sparse format.
+
+    Per-layer indices are *layer-local*, so each costs
+    ceil(log2(layer_size)) bits instead of the flat format's 4 bytes --
+    the honest bytes-on-wire win structure-aware compression buys at equal
+    k (reported per policy by benchmarks/bench_tasks.py)."""
+    total = 0
+    for b, (_, lo, hi) in zip(budgets, slices):
+        idx_bytes = max(1, -(-max(hi - lo, 2).bit_length() // 8))
+        total += int(b) * (value_bytes + idx_bytes)
+    return total
+
+
+# ---------------------------------------------------------------------------
 # sparse wire format -- what actually crosses a channel
 # ---------------------------------------------------------------------------
 

@@ -65,7 +65,9 @@ import numpy as np
 
 from .channels import (DEFAULT_CHANNELS, ChannelSpec, DeviceProfile,
                        comm_cost, comp_cost, stack_specs)
-from .compressor import (LGCCompressor, flatten_tree, tree_size,
+from .compressor import (LAYER_POLICIES, LGCCompressor, flatten_tree,
+                         layer_budgets, per_layer_candidates_hist,
+                         per_layer_compress, tree_layer_slices, tree_size,
                          unflatten_like, wire_bytes)
 from .error_feedback import EFState, ef_compress
 # counter-based randomness and environment dynamics live one layer below, in
@@ -115,6 +117,11 @@ class FLConfig:
     # ("static", "markov_urban", "gilbert_flaky", ...); "static" reproduces
     # the memoryless seed model exactly
     scenario: str | Scenario = "static"
+    # per-model-layer budget policy: "global" (flat top-k over the whole
+    # vector -- the paper's LGC, bit-identical to pre-policy code) or a
+    # repro.core.compressor.LAYER_POLICIES name ("uniform", "size_prop",
+    # "divergence"); "uniform" is bit-equal to "global" on the exact backend
+    layer_policy: str = "global"
 
 
 @dataclasses.dataclass
@@ -236,6 +243,10 @@ class LGCSimulator:
         self.mesh, self.server_reduce = mesh, server_reduce
         assert self.engine in ("batched", "loop", "sharded"), self.engine
         assert self.backend in ("exact", "pallas"), self.backend
+        if cfg.layer_policy != "global" and cfg.layer_policy not in LAYER_POLICIES:
+            raise ValueError(
+                f"unknown layer_policy {cfg.layer_policy!r}; expected "
+                f"'global' or one of {sorted(LAYER_POLICIES)}")
         self.m_devices = len(task.device_data)
         if isinstance(controllers, (list, tuple)):
             self.fleet = ControllerFleet(controllers)
@@ -428,9 +439,39 @@ class LGCSimulator:
                 self._record(hist, t)
         return hist
 
+    def _layer_slices(self) -> list[tuple[str, int, int]]:
+        """(name, lo, hi) flat slices of the model layers, cached."""
+        if not hasattr(self, "_layer_slices_cache"):
+            self._layer_slices_cache = tree_layer_slices(self.params)
+        return self._layer_slices_cache
+
     def _ef_step(self, m: int, t: int, delta: Array, ks: Sequence[int],
                  received: Sequence[bool]) -> Array:
-        """One error-compensated layered compression (backend-dispatched)."""
+        """One error-compensated layered compression (backend-dispatched).
+
+        ``cfg.layer_policy != "global"`` prepends the per-model-layer
+        candidate mask (:mod:`repro.core.compressor` per-layer section):
+        budgets reshape WHICH coordinates compete for the channel layers,
+        and error feedback still accumulates u - g, so no update mass is
+        lost.  Semantics match the batched engine's ``compress`` exactly
+        (the loop~batched rung of the ladder holds per policy)."""
+        policy = self.cfg.layer_policy
+        if policy != "global":
+            slices = self._layer_slices()
+            ks_arr = jnp.asarray(ks, jnp.int32)
+            u = self.ef[m].e + delta
+            if self.backend == "pallas":
+                from repro.kernels import lgc_compress_hist
+                b = layer_budgets(policy, u, slices, jnp.sum(ks_arr), self.d)
+                mask = per_layer_candidates_hist(u, slices, b)
+                g, _ = lgc_compress_hist(
+                    jnp.zeros_like(u), jnp.where(mask, u, 0.0),
+                    jnp.cumsum(ks_arr), jnp.asarray(received, jnp.int32))
+            else:
+                g = per_layer_compress(u, ks_arr, jnp.asarray(received),
+                                       slices, policy, self.d)
+            self.ef[m] = EFState(u - g)
+            return g
         if self.backend == "pallas":
             from repro.kernels import lgc_compress_hist
             cum_ks = jnp.cumsum(jnp.asarray(ks, jnp.int32))

@@ -74,8 +74,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from .channels import comm_cost_mb, comp_cost, stack_specs
-from .compressor import (flatten_tree, lgc_compress_topk, qsgd_dequantize,
-                         qsgd_quantize, unflatten_like)
+from .compressor import (flatten_tree, layer_budgets, lgc_compress_topk,
+                         per_layer_candidates_hist, per_layer_compress,
+                         qsgd_dequantize, qsgd_quantize, tree_layer_slices,
+                         unflatten_like)
 from .fl import (TAG_BATCH, TAG_CHANNEL, TAG_QUANT, History, stream_key)
 from .scenario import dropout_mask, sample_from_carry, step_carry
 
@@ -149,8 +151,36 @@ def make_device_phase(*, cfg, loss_fn, base, mode, backend, scenario,
                 lambda p, gi: jnp.where(valid, p - eta * gi, p), w, grads)
         return jax.vmap(dev)(w_hat, keys, n_dev, data)
 
-    def compress(ef, delta, ks_mat, recv, k_cap):
-        """(g, ef_new) for all devices; layered EF, backend-dispatched."""
+    policy = getattr(cfg, "layer_policy", "global")
+
+    def compress(ef, delta, ks_mat, recv, k_cap, slices):
+        """(g, ef_new) for all devices; layered EF, backend-dispatched.
+
+        ``cfg.layer_policy != "global"`` prepends the per-model-layer
+        candidate mask (:mod:`repro.core.compressor` per-layer section) to
+        the unchanged channel layering: the policy reshapes WHICH
+        coordinates compete, error feedback still accumulates u - g.  The
+        "uniform" policy is bit-equal to "global" on the exact backend, so
+        it rides the engine-equivalence ladder unchanged."""
+        if policy != "global":
+            u = ef + delta
+            if backend == "pallas":
+                from repro.kernels import lgc_compress_hist
+
+                def row(ui, ki, ri):
+                    b = layer_budgets(policy, ui, slices,
+                                      jnp.sum(ki.astype(jnp.int32)), k_cap)
+                    mask = per_layer_candidates_hist(ui, slices, b)
+                    gi, _ = lgc_compress_hist(
+                        jnp.zeros_like(ui), jnp.where(mask, ui, 0.0),
+                        jnp.cumsum(ki), ri.astype(jnp.int32))
+                    return gi
+            else:
+                def row(ui, ki, ri):
+                    return per_layer_compress(ui, ki, ri, slices, policy,
+                                              k_cap)
+            g = jax.vmap(row)(u, ks_mat, recv)
+            return g, u - g
         if backend == "pallas":
             from repro.kernels import lgc_compress_hist
             cum = jnp.cumsum(ks_mat, axis=1)
@@ -212,7 +242,10 @@ def make_device_phase(*, cfg, loss_fn, base, mode, backend, scenario,
                                      0.0)
         else:
             recv = ch.up[:, :n_ch]
-            g, ef_new = compress(ef, delta, ks_mat, recv, k_cap)
+            # model-layer slices of the per-device flat vector, read off the
+            # stacked (M_blk, ...) pytree at trace time (zero runtime cost)
+            slices = tree_layer_slices(w_hat, skip_leading_axes=1)
+            g, ef_new = compress(ef, delta, ks_mat, recv, k_cap, slices)
             if mode == "lgc_q8":
                 kq = jax.vmap(lambda i: stream_key(
                     base, TAG_QUANT, t_sync, i))(dev_ids)
@@ -268,8 +301,16 @@ class BatchedEngine:
         # the simulator (same stationary TAG_SCEN_INIT draw the loop engine
         # starts from), advanced inside the window scan below
         self.scen_carry = sim.scen_carry
+        # donate the chained per-device state (w_hat, anchor, ef,
+        # scen_carry): every window consumes last window's buffers and
+        # run() rebinds the attributes from the outputs, so XLA can update
+        # the ~(M, D) state in place instead of allocating fresh output
+        # buffers each window.  params (arg 0) is NOT donated: run() keeps
+        # params_before for mid-window eval records after the call.
+        # tests/test_fl.py::TestBufferDonation pins the aliasing.
         self._window = jax.jit(self._make_window(),
-                               static_argnames=("k_cap",))
+                               static_argnames=("k_cap",),
+                               donate_argnums=(1, 2, 3, 4))
 
     # -- the one-XLA-program sync window ------------------------------------
     def _make_window(self, axis_name: str | None = None,
@@ -387,11 +428,20 @@ class BatchedEngine:
 
     def _k_cap(self) -> int:
         """Static top-k bound for the threshold-based layer selection,
-        rounded to a power of two so DDPG budget changes rarely recompile."""
+        rounded to a power of two AND monotone across the run: the
+        threshold selection is cap-invariant for any cap >= cumsum(ks)
+        (``rank_below`` reads only ``vals[b-1]`` for the budget boundaries
+        b), so reusing the largest cap seen keeps the results bitwise
+        identical while eliminating the recompile that used to fire every
+        time a DDPG budget change crossed a power of two in *either*
+        direction (tests/test_fl.py::TestBufferDonation pins one-program
+        behaviour)."""
         if self.sim.mode == "fedavg":
             return 1                      # unused by the dense path
         k_max = max(1, max(sum(dec.ks) for dec in self.sim.decisions))
-        return min(self.d, 1 << (k_max - 1).bit_length())
+        cap = min(self.d, 1 << (k_max - 1).bit_length())
+        self._k_cap_hi = max(cap, getattr(self, "_k_cap_hi", 0))
+        return self._k_cap_hi
 
     def _ks_mat(self) -> Array:
         """Per-device layer budgets as a traced (M, C) array (topk folds all
@@ -472,6 +522,9 @@ class ShardedEngine(BatchedEngine):
                 k_cap=k_cap)
             fn = jax.jit(shard_map(
                 body, mesh=self.mesh, in_specs=self._in_specs,
-                out_specs=self._out_specs))
+                out_specs=self._out_specs),
+                # same donation contract as the unsharded window: the
+                # chained (M, .) state updates in place, shard-resident
+                donate_argnums=(1, 2, 3, 4))
             self._programs[k_cap] = fn
         return fn(*args)

@@ -324,11 +324,17 @@ def run_population(pop: Population, cfg: FLConfig, mode: str = "lgc",
     device_phase = make_device_phase(
         cfg=cfg, loss_fn=task.loss_fn, base=base, mode=mode,
         backend=backend, scenario=scn, d=d, n_ch=n_ch)
-    phase_jit = jax.jit(device_phase, static_argnames=("k_cap",))
+    # donate the gathered cohort state (w_hat, anchor, ef, scen_carry):
+    # each window consumes freshly assembled (M, .) buffers whose outputs
+    # are scattered back to the host pools, so in-place update is always
+    # legal here (same donation contract as BatchedEngine._window)
+    phase_jit = jax.jit(device_phase, static_argnames=("k_cap",),
+                        donate_argnums=(0, 1, 2, 3))
 
     # shared server half: one jitted program over the assembled (M, D)
-    # update matrix, identical for every engine blocking
-    @jax.jit
+    # update matrix, identical for every engine blocking; g is dead after
+    # the call, params is not (params_before feeds mid-window evals)
+    @functools.partial(jax.jit, donate_argnums=(1,))
     def _apply_server(params, g):
         flat = flatten_tree(params) - jnp.sum(g, axis=0) / g.shape[0]
         return unflatten_like(flat, params)
@@ -370,7 +376,8 @@ def run_population(pop: Population, cfg: FLConfig, mode: str = "lgc",
             if fn is None:
                 fn = jax.jit(shard_map(
                     functools.partial(device_phase, k_cap=k_cap),
-                    mesh=mesh, in_specs=in_specs, out_specs=out_specs))
+                    mesh=mesh, in_specs=in_specs, out_specs=out_specs),
+                    donate_argnums=(0, 1, 2, 3))
                 _programs[sig] = fn
             return fn(*args)
     elif engine == "batched":

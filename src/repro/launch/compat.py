@@ -22,6 +22,44 @@ from typing import Sequence
 import jax
 
 
+def ensure_fast_cpu_runtime() -> bool:
+    """Opt XLA:CPU out of the thunk runtime on the jaxlib 0.4.3x line.
+
+    The thunk runtime (default since jaxlib 0.4.32) executes ``while`` loop
+    bodies through a concurrent task scheduler whose dispatch overhead
+    dwarfs the actual compute on small-core hosts: the cnn_mnist sync
+    window (a 4-step ``lax.scan`` over vmapped conv grads) measures 26.2 s
+    per window on a 1-core container against 0.70 s with
+    ``--xla_cpu_use_thunk_runtime=false`` -- a 37x gap that made the CNN /
+    GRU tasks look compute-bound when they were scheduler-bound
+    (docs/ARCHITECTURE.md §10).
+
+    Appends the flag to ``XLA_FLAGS`` (idempotently) so it takes effect at
+    the first backend initialisation.  Gated to jaxlib versions that still
+    ship the legacy runtime ([0.4.32, 0.5)): unknown XLA flags are a hard
+    startup error, so newer jaxlibs -- where the legacy runtime was removed
+    -- must not see it.  Set ``REPRO_XLA_THUNK_RUNTIME=1`` to keep the
+    thunk runtime (e.g. to benchmark it).  Returns True when the flag is
+    (already) applied.  Best-effort: if the backend is already initialised
+    the env change cannot take effect for this process.
+    """
+    flag = "--xla_cpu_use_thunk_runtime=false"
+    if flag in os.environ.get("XLA_FLAGS", ""):
+        return True
+    if os.environ.get("REPRO_XLA_THUNK_RUNTIME") == "1":
+        return False
+    try:
+        import jaxlib
+        ver = tuple(int(p) for p in jaxlib.__version__.split(".")[:3])
+    except Exception:
+        return False
+    if not ((0, 4, 32) <= ver < (0, 5, 0)):
+        return False
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " " + flag).strip()
+    return True
+
+
 def force_host_device_count(n: int) -> None:
     """Make the CPU backend expose ``n`` virtual devices (a host mesh).
 
@@ -37,6 +75,11 @@ def force_host_device_count(n: int) -> None:
             if not f.startswith("--xla_force_host_platform_device_count=")]
     os.environ["XLA_FLAGS"] = " ".join(
         kept + [f"--xla_force_host_platform_device_count={n}"])
+    # callers invoke this before their first backend init (fresh worker
+    # processes), which is also the last safe moment for the CPU runtime
+    # flag -- piggyback so subprocess workers that import jax before
+    # repro.core still get the fast runtime
+    ensure_fast_cpu_runtime()
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> "jax.sharding.Mesh":

@@ -67,17 +67,36 @@ def cnn_init(key: Array) -> dict:
     }
 
 
-def cnn_logits(params: dict, x: Array) -> Array:
-    def conv(z, w, b):
-        z = jax.lax.conv_general_dilated(z, w, (1, 1), "SAME",
-                                         dimension_numbers=("NHWC", "HWIO", "NHWC"))
-        return jax.nn.relu(z + b)
+def _conv3x3(z: Array, w: Array, b: Array) -> Array:
+    """SAME 3x3 conv as shift-im2col: pad + 9 static slices + one matmul.
 
-    def pool(z):
-        return jax.lax.reduce_window(z, -jnp.inf, jax.lax.max,
-                                     (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
-    z = pool(conv(x, params["c1"], params["b1"]))
-    z = pool(conv(z, params["c2"], params["b2"]))
+    ``lax.conv_general_dilated`` runs ~3 GFLOP/s on XLA:CPU while its dot
+    kernels hit ~27, so the window program expresses the conv as the matmul
+    it is: the patch matrix is 9 shifted views of the padded input
+    concatenated on the channel axis, contracted against the (9*cin, cout)
+    reshaped kernel.  Forward agrees with lax.conv to float reduction order
+    (~1e-6); the engine ladder is unaffected because every engine runs this
+    same formulation (docs/ARCHITECTURE.md §10).
+    """
+    bsz, h, wd, cin = z.shape
+    zp = jnp.pad(z, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    patches = jnp.concatenate(
+        [zp[:, i:i + h, j:j + wd, :] for i in range(3) for j in range(3)],
+        axis=-1)
+    return patches @ w.reshape(9 * cin, w.shape[-1]) + b
+
+
+def _pool2x2(z: Array) -> Array:
+    """2x2/2 max pool as a reshape + max (cheaper than reduce_window on CPU)."""
+    bsz, h, wd, c = z.shape
+    return jnp.max(z.reshape(bsz, h // 2, 2, wd // 2, 2, c), axis=(2, 4))
+
+
+def cnn_logits(params: dict, x: Array) -> Array:
+    # relu AFTER pool: max and relu commute exactly (both are max-chains),
+    # and the relu then touches a 4x smaller tensor in forward and backward
+    z = jax.nn.relu(_pool2x2(_conv3x3(x, params["c1"], params["b1"])))
+    z = jax.nn.relu(_pool2x2(_conv3x3(z, params["c2"], params["b2"])))
     z = z.reshape(z.shape[0], -1)
     z = jax.nn.relu(z @ params["w1"] + params["bw1"])
     return z @ params["w2"] + params["bw2"]

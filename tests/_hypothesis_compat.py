@@ -8,7 +8,7 @@ shrinking/coverage, but the invariants still get exercised in CI images
 without the dependency.
 
 Only the strategy surface this repo uses is implemented: ``st.integers``,
-``st.lists`` and ``st.composite``.
+``st.booleans``, ``st.lists`` and ``st.composite``.
 """
 from __future__ import annotations
 
@@ -34,6 +34,10 @@ except ImportError:                       # pragma: no cover - env dependent
         @staticmethod
         def integers(min_value: int, max_value: int) -> _Strategy:
             return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda rng: rng.random() < 0.5)
 
         @staticmethod
         def lists(elements: _Strategy, min_size: int = 0,

@@ -169,6 +169,124 @@ class TestTracedSelection:
                                           np.asarray(one))
 
 
+class TestPerLayer:
+    """Per-model-layer budget path (repro.core.compressor per-layer section).
+
+    Contract: layer candidate masks are disjoint (disjoint slices), budgets
+    sum to k_total ("uniform" always, "size_prop" whenever k_total <= D),
+    and the "uniform" policy is BIT-equal to the global top-k path -- the
+    property that lets FLConfig.layer_policy ride the equivalence ladder.
+    """
+
+    def _tree(self):
+        return {"a": jnp.zeros((40, 5)), "b": jnp.zeros((64,)),
+                "c": {"w": jnp.zeros((12, 8))}}
+
+    def _setup(self, seed=0):
+        from repro.core.compressor import tree_layer_slices
+        slices = tree_layer_slices(self._tree())
+        d = slices[-1][2]
+        return slices, d, _vec(d, seed)
+
+    def test_slices_cover_flat_vector(self):
+        from repro.core.compressor import tree_layer_slices
+        tree = self._tree()
+        slices = tree_layer_slices(tree)
+        assert slices[0][1] == 0 and slices[-1][2] == tree_size(tree)
+        for (_, _, hi), (_, lo2, _) in zip(slices, slices[1:]):
+            assert hi == lo2                      # contiguous, no gaps
+        # skip_leading_axes drops the stacked device axis
+        stacked = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((7,) + a.shape), tree)
+        assert tree_layer_slices(stacked, skip_leading_axes=1) == slices
+
+    def test_budgets_sum_and_bounds(self):
+        from repro.core.compressor import LAYER_POLICIES, layer_budgets
+        slices, d, u = self._setup()
+        sizes = [hi - lo for _, lo, hi in slices]
+        for k_total in (1, 37, 150, d):
+            for pol in ("uniform", "size_prop"):
+                b = np.asarray(layer_budgets(pol, u, slices,
+                                             jnp.int32(k_total), d))
+                assert b.sum() == k_total, (pol, k_total, b)
+                assert (b >= 0).all() and (b <= sizes).all()
+        assert set(LAYER_POLICIES) == {"uniform", "size_prop", "divergence"}
+
+    def test_divergence_budget_follows_mass(self):
+        from repro.core.compressor import layer_budgets
+        slices, d, _ = self._setup()
+        # all update mass in layer "b" -> it gets (almost) all the budget
+        u = jnp.zeros((d,)).at[slices[1][1]:slices[1][2]].set(5.0)
+        b = np.asarray(layer_budgets("divergence", u, slices,
+                                     jnp.int32(30), d))
+        assert b[1] == 30 and b[0] == 0 and b[2] == 0
+
+    def test_candidate_masks_disjoint_and_sized(self):
+        from repro.core.compressor import layer_budgets, per_layer_candidates
+        slices, d, u = self._setup(seed=3)
+        for pol in ("uniform", "size_prop", "divergence"):
+            b = layer_budgets(pol, u, slices, jnp.int32(90), d)
+            mask = per_layer_candidates(u, slices, b, d)
+            for i, (_, lo, hi) in enumerate(slices):
+                assert int(mask[lo:hi].sum()) == int(b[i])
+
+    def test_uniform_bit_equals_global(self):
+        from repro.core.compressor import (lgc_compress_topk,
+                                           per_layer_compress)
+        slices, d, _ = self._setup()
+        ks = jnp.asarray([20, 30, 40], jnp.int32)
+        recv = jnp.asarray([True, False, True])
+        for seed in range(4):
+            u = _vec(d, seed)
+            np.testing.assert_array_equal(
+                np.asarray(per_layer_compress(u, ks, recv, slices,
+                                              "uniform", d)),
+                np.asarray(lgc_compress_topk(u, ks, recv, d)))
+
+    def test_uniform_bit_equals_global_under_ties(self):
+        from repro.core.compressor import (lgc_compress_topk,
+                                           per_layer_compress)
+        slices, d, u = self._setup(seed=7)
+        # integer-valued magnitudes: massive tie groups across layers
+        u = jnp.round(u * 2.0)
+        ks = jnp.asarray([15, 25], jnp.int32)
+        recv = jnp.asarray([True, True])
+        np.testing.assert_array_equal(
+            np.asarray(per_layer_compress(u, ks, recv, slices,
+                                          "uniform", d)),
+            np.asarray(lgc_compress_topk(u, ks, recv, d)))
+
+    def test_nonuniform_sends_same_coordinate_count(self):
+        from repro.core.compressor import per_layer_compress
+        slices, d, u = self._setup(seed=5)
+        ks = jnp.asarray([30, 30], jnp.int32)
+        recv = jnp.asarray([True, True])
+        for pol in ("size_prop", "divergence"):
+            g = per_layer_compress(u, ks, recv, slices, pol, d)
+            assert int((g != 0).sum()) == 60
+
+    def test_per_layer_wire_bytes_smaller_indices(self):
+        from repro.core.compressor import per_layer_wire_bytes, wire_bytes
+        slices, d, _ = self._setup()
+        budgets = [20, 30, 40]
+        per_layer = per_layer_wire_bytes(budgets, slices)
+        # every layer here is < 2^8 coordinates -> 1-byte local indices
+        assert per_layer == sum(b * (4 + 1) for b in budgets)
+        assert per_layer < sum(wire_bytes(budgets))
+
+    def test_hist_routing_threshold_is_invisible(self):
+        from repro.core.compressor import (layer_budgets,
+                                           per_layer_candidates_hist)
+        slices, d, u = self._setup(seed=2)
+        b = layer_budgets("size_prop", u, slices, jnp.int32(80), d)
+        via_ref = per_layer_candidates_hist(u, slices, b,
+                                            pallas_min_elems=10 ** 9)
+        via_pallas = per_layer_candidates_hist(u, slices, b,
+                                               pallas_min_elems=1)
+        np.testing.assert_array_equal(np.asarray(via_pallas),
+                                      np.asarray(via_ref))
+
+
 # ---------------------------------------------------------------------------
 # property-based tests (hypothesis)
 # ---------------------------------------------------------------------------
@@ -213,6 +331,24 @@ def test_prop_error_feedback_conservation(args):
     g, st = ef_compress(EFState(jnp.zeros(n)), x, comp)
     np.testing.assert_allclose(np.asarray(g + st.e), np.asarray(x),
                                rtol=0, atol=0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(vec_and_ks(), st.booleans())
+def test_prop_per_layer_uniform_equals_global(args, quantize):
+    """uniform per-layer policy == global top-k, bitwise, ties included."""
+    from repro.core.compressor import lgc_compress_topk, per_layer_compress
+    n, seed, ks = args
+    x = _vec(n, seed)
+    if quantize:                     # integer magnitudes: huge tie groups
+        x = jnp.round(x * 2.0)
+    slices = [("a", 0, n // 3), ("b", n // 3, (2 * n) // 3),
+              ("c", (2 * n) // 3, n)]
+    ks_a = jnp.asarray(ks, jnp.int32)
+    recv = jnp.asarray([s % 2 == 0 for s in range(len(ks))])
+    np.testing.assert_array_equal(
+        np.asarray(per_layer_compress(x, ks_a, recv, slices, "uniform", n)),
+        np.asarray(lgc_compress_topk(x, ks_a, recv, n)))
 
 
 @settings(max_examples=25, deadline=None)

@@ -130,6 +130,42 @@ class TestFusedPipeline:
         assert np.all(got_support[exact_support])
 
 
+class TestPerLayerHistParity:
+    """Per-layer candidate selection (repro.core.compressor) routes big
+    segments through the Pallas kernels and small ones through ref.py; the
+    routing threshold must be invisible -- kernels and oracles are
+    bit-equal -- including at the 10^6-element scale the routing exists
+    for."""
+
+    def test_parity_at_1e6(self):
+        from repro.core.compressor import (layer_budgets,
+                                           per_layer_candidates_hist)
+        n_big, n_small = 1_000_000, 30_000
+        u = jnp.concatenate([_vec(n_big, jnp.float32, seed=20),
+                             _vec(n_small, jnp.float32, seed=21)])
+        slices = [("big", 0, n_big), ("small", n_big, n_big + n_small)]
+        b = layer_budgets("size_prop", u, slices, jnp.int32(4096),
+                          u.shape[0])
+        via_pallas = per_layer_candidates_hist(u, slices, b)   # big->kernel
+        via_ref = per_layer_candidates_hist(u, slices, b,
+                                            pallas_min_elems=10 ** 9)
+        np.testing.assert_array_equal(np.asarray(via_pallas),
+                                      np.asarray(via_ref))
+        # hist selection keeps >= budget per layer, overshoot one bin
+        for i, (_, lo, hi) in enumerate(slices):
+            nsel = int(np.asarray(via_pallas[lo:hi]).sum())
+            assert nsel >= int(b[i])
+            assert nsel <= int(b[i]) + (hi - lo) // 64
+
+    def test_kernel_vs_ref_at_1e6(self):
+        x = _vec(1_000_000, jnp.float32, seed=22)
+        m = maxabs(x)
+        np.testing.assert_array_equal(
+            np.asarray(histogram(x, m)),
+            np.asarray(ref.hist_counts(x, m.reshape(()))))
+        assert float(m[0, 0]) == float(ref.hist_maxabs(x))
+
+
 class TestSWADecode:
     @pytest.mark.parametrize("shape", [(2, 4, 512, 64), (1, 8, 1024, 128),
                                        (4, 2, 256, 32)])
