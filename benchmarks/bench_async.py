@@ -1,0 +1,116 @@
+"""Server-aggregator sweep: simulated wall-clock vs accuracy per mode.
+
+The sync servers ("mean", "diloco") wait for the slowest uplink of every
+window, so their simulated wall-clock (History.server_wall_s, f64) is the
+max over syncing devices of comm + compute time; "semi_sync" waits at most
+the scenario-derived deadline and folds late updates staleness-weighted
+into later rounds (docs/ARCHITECTURE.md §11).  This bench runs all three
+:data:`repro.core.server.AGGREGATORS` under the profiles where the sync
+barrier actually hurts --
+
+* ``static``            -- the control: everyone on time, all modes tie
+* ``gilbert_flaky``     -- burst outages + flaky devices (registry entry)
+* ``stragglers``        -- every 4th device computes 3x slower
+* ``flaky_stragglers``  -- both at once (the acceptance profile:
+                           "gilbert_flaky + stragglers")
+
+-- and records per (profile, aggregator) the simulated wall, final
+accuracy/loss, and the resource spends.  Rows land in ``BENCH_async.json``
+via ``benchmarks/run.py`` (the bench-smoke CI lane uploads it);
+``benchmarks/check_regression.py --async-current`` gates the headline
+claim: under the straggler profiles some async aggregator must beat the
+sync server's wall-clock at <= 2 points of accuracy loss.
+
+The straggler profiles are defined here rather than in the SCENARIOS
+registry: registering them would enroll them in every parametrized
+scenario-zoo test, and they exist to exercise the *server*, not the
+channel chains.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core import FLConfig, run_baseline
+from repro.core.scenario import (SCENARIOS, DropoutSpec, GilbertElliottSpec,
+                                 Scenario, StragglerSpec)
+
+from .common import emit
+
+_STRAG = StragglerSpec(slow_every=4, slowdown=3.0)
+
+# bench-local profiles (see module docstring for why they are not registry
+# entries); gilbert_flaky comes straight from the registry
+PROFILES = {
+    "static": SCENARIOS["static"],
+    "gilbert_flaky": SCENARIOS["gilbert_flaky"],
+    "stragglers": Scenario(name="stragglers", straggler=_STRAG),
+    "flaky_stragglers": Scenario(
+        name="flaky_stragglers",
+        gilbert_elliott=GilbertElliottSpec(p_gb=0.2, p_bg=0.3),
+        dropout=DropoutSpec(base_prob=0.05, flaky_every=4, flaky_prob=0.3),
+        straggler=_STRAG),
+}
+
+AGG_CFGS = {
+    "mean": {},
+    "diloco": {},
+    "semi_sync": {"staleness_cap": 2},
+}
+
+
+def _row(profile: str, aggregator: str, hist, wall: float, m: int,
+         rounds: int) -> dict:
+    return {
+        "profile": profile, "aggregator": aggregator, "m_devices": m,
+        "rounds": rounds, "wall_s": round(wall, 3),
+        "sim_wall_clock_s": round(hist.server_wall_s[-1], 4),
+        "final_loss": round(hist.loss[-1], 4),
+        "final_accuracy": round(hist.accuracy[-1], 4),
+        "energy_j": round(hist.energy_j[-1], 2),
+        "money": round(hist.money[-1], 4),
+        "time_s": round(hist.time_s[-1], 2),
+        "uplink_mb": round(hist.uplink_mb[-1], 4),
+    }
+
+
+def run(profiles=None, m: int = 8, rounds: int = 60, n_train: int = 1500,
+        emit_csv: bool = True) -> dict:
+    from repro.models.paper_models import make_mnist_task
+    names = list(profiles or PROFILES)
+    rows = []
+    for name in names:
+        scn = PROFILES[name]
+        task = make_mnist_task("lr", m_devices=m, n_train=n_train,
+                               scenario=scn)
+        for agg, extra in AGG_CFGS.items():
+            cfg = FLConfig(rounds=rounds, eval_every=max(rounds // 4, 1),
+                           scenario=scn, aggregator=agg, **extra)
+            t0 = time.time()
+            h = run_baseline(task, cfg, "lgc", h=4, engine="batched")
+            rows.append(_row(name, agg, h, time.time() - t0, m, rounds))
+            if emit_csv:
+                r = rows[-1]
+                emit(f"async_{name}_{agg}", r["wall_s"] * 1e6 / rounds,
+                     f"sim_wall={r['sim_wall_clock_s']};"
+                     f"acc={r['final_accuracy']}")
+    return {"m_devices": m, "rounds": rounds, "rows": rows}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--m", type=int, default=8)
+    ap.add_argument("--profiles", default=None,
+                    help="comma-separated profile names (default: all)")
+    ap.add_argument("--out", default="BENCH_async.json")
+    args = ap.parse_args()
+    names = args.profiles.split(",") if args.profiles else None
+    res = run(profiles=names, m=args.m, rounds=args.rounds)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

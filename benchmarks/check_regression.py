@@ -1,6 +1,6 @@
 """Bench regression gate: fail CI when simulator throughput slows down.
 
-Two gates, each naming the metric and file that tripped:
+Five gates, each naming the metric and file that tripped:
 
 * **engine gate** -- the batched-engine ``device_steps_per_s`` rows of a
   freshly generated BENCH_sim.json vs the committed BENCH_baseline.json,
@@ -16,24 +16,44 @@ Two gates, each naming the metric and file that tripped:
   whole point is the memory ratio) and ``final_accuracy`` must not drop
   more than ``tolerance`` absolute.  Throughput is deliberately not gated
   here -- the population bench is dominated by host gather/scatter, too
-  noisy at smoke budgets.
+  noisy at smoke budgets;
+* **scenario gate** -- the (scenario, controller) ``final_accuracy`` rows
+  of BENCH_scenarios.json vs the committed BENCH_scenarios_baseline.json.
+  This is the DDPG-vs-fixed accuracy table: a controller change that
+  quietly costs accuracy under ``gilbert_flaky`` or ``diurnal_cycle``
+  trips here, not in a throughput number;
+* **async gate** -- self-relative within BENCH_async.json (no baseline
+  file): under the straggler profiles ("stragglers",
+  "flaky_stragglers" -- the ISSUE's "gilbert_flaky + stragglers") some
+  async aggregator must beat the sync mean's simulated wall-clock while
+  losing at most 2 points of final accuracy.  This is the headline claim
+  of the semi-sync server (docs/ARCHITECTURE.md §11), gated so it cannot
+  silently rot.
 
 Exits nonzero when any matching row regresses more than ``--tolerance``
-(default 30%).  Rows present on only one side are reported but never fail
-the gate (new sweeps should not need a baseline update to land), and
-faster-than-baseline rows print so improvements are visible in the CI log.
-A missing tasks baseline file skips the task gate with a note (the engine
-gate still runs).
+(default 30%; accuracy floors use the same number as an absolute drop).
+Rows present on only one side are reported but never fail the gate (new
+sweeps should not need a baseline update to land), and faster-than-baseline
+rows print so improvements are visible in the CI log.  A missing baseline
+file skips its gate with a note (the engine gate still runs).
+
+When ``$GITHUB_STEP_SUMMARY`` is set (any GitHub Actions step), every gated
+metric is also appended there as one markdown table -- value, baseline,
+threshold, pass/fail -- so a red bench lane is diagnosable from the job
+summary without scrolling the log.
 
 The committed baselines were measured on a 2-core container -- slower than
 the CI runners -- so the gates only trip on real order-of-magnitude
 regressions (a lost jit, an accidental O(M) host loop), not runner jitter.
-Refresh both (the recipe also lives in README.md's benchmarking section):
+Refresh them (the recipe also lives in README.md's benchmarking section):
 
     python -m benchmarks.run --smoke
     cp BENCH_sim.json BENCH_baseline.json
     cp BENCH_tasks.json BENCH_tasks_baseline.json
     cp BENCH_population.json BENCH_population_baseline.json
+    cp BENCH_scenarios.json BENCH_scenarios_baseline.json
+
+BENCH_async.json needs no baseline copy: its gate is self-relative.
 """
 from __future__ import annotations
 
@@ -41,6 +61,31 @@ import argparse
 import json
 import os
 import sys
+
+# one row per gated metric: (metric, key, value, baseline, threshold, ok);
+# write_step_summary() renders them into $GITHUB_STEP_SUMMARY
+SUMMARY_ROWS: list[tuple[str, str, str, str, str, bool]] = []
+
+
+def _note(metric: str, key, value, baseline, threshold, ok: bool) -> None:
+    SUMMARY_ROWS.append((metric, str(key), str(value), str(baseline),
+                         str(threshold), ok))
+
+
+def write_step_summary(path: str | None = None) -> None:
+    """Append the gated-metric table to $GITHUB_STEP_SUMMARY (no-op when
+    unset, e.g. local runs)."""
+    path = path or os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path or not SUMMARY_ROWS:
+        return
+    lines = ["### Bench regression gate", "",
+             "| metric | key | value | baseline | threshold | result |",
+             "|---|---|---|---|---|---|"]
+    for metric, key, value, baseline, threshold, ok in SUMMARY_ROWS:
+        lines.append(f"| {metric} | {key} | {value} | {baseline} | "
+                     f"{threshold} | {'pass' if ok else '**FAIL**'} |")
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n")
 
 
 def _gate(base_rows: dict, current: dict, tolerance: float, key_of,
@@ -60,12 +105,16 @@ def _gate(base_rows: dict, current: dict, tolerance: float, key_of,
             continue
         floor = b["device_steps_per_s"] * (1.0 - tolerance)
         ratio = r["device_steps_per_s"] / b["device_steps_per_s"]
-        verdict = "ok" if r["device_steps_per_s"] >= floor else "REGRESSED"
+        ok = r["device_steps_per_s"] >= floor
+        verdict = "ok" if ok else "REGRESSED"
         print(f"  {verdict:>9}: {key}  baseline "
               f"{b['device_steps_per_s']:.1f} -> current "
               f"{r['device_steps_per_s']:.1f} device-steps/s  "
               f"({ratio:.2f}x, floor {floor:.1f})")
-        if verdict == "REGRESSED":
+        _note(f"{label} device_steps_per_s", key,
+              f"{r['device_steps_per_s']:.1f}",
+              f"{b['device_steps_per_s']:.1f}", f">= {floor:.1f}", ok)
+        if not ok:
             failures.append(f"{label} device_steps_per_s {key}: "
                             f"{ratio:.2f}x of baseline")
     for key in set(base_rows) - seen:
@@ -119,6 +168,12 @@ def check_population(baseline: dict, current: dict, tolerance: float
               f" (ceiling {ceil_ratio:.4f})  accuracy "
               f"{b['final_accuracy']:.4f} -> {r['final_accuracy']:.4f}"
               f" (floor {acc_floor:.4f})")
+        _note("BENCH_population.json ef_bytes_vs_dense", f"ef_store={key}",
+              f"{r['ef_bytes_vs_dense']:.4f}", f"{b['ef_bytes_vs_dense']:.4f}",
+              f"<= {ceil_ratio:.4f}", not bad_bytes)
+        _note("BENCH_population.json final_accuracy", f"ef_store={key}",
+              f"{r['final_accuracy']:.4f}", f"{b['final_accuracy']:.4f}",
+              f">= {acc_floor:.4f}", not bad_acc)
         if bad_bytes:
             failures.append(f"BENCH_population.json ef_bytes_vs_dense "
                             f"ef_store={key}: {r['ef_bytes_vs_dense']:.4f} "
@@ -132,6 +187,100 @@ def check_population(baseline: dict, current: dict, tolerance: float
     return failures
 
 
+def check_scenarios(baseline: dict, current: dict, tolerance: float
+                    ) -> list[str]:
+    """Scenario gate: (scenario, controller)-keyed ``final_accuracy`` rows
+    of BENCH_scenarios.json -- the DDPG-vs-fixed table.  Accuracy must not
+    drop more than ``tolerance`` absolute below the committed baseline."""
+    base_rows = {(r["scenario"], r["controller"]): r
+                 for r in baseline["rows"]}
+    seen, failures = set(), []
+    for r in current["rows"]:
+        key = (r["scenario"], r["controller"])
+        seen.add(key)
+        b = base_rows.get(key)
+        if b is None:
+            print(f"  new row (no baseline): {key}  "
+                  f"accuracy {r['final_accuracy']:.4f}")
+            continue
+        floor = b["final_accuracy"] - tolerance
+        ok = r["final_accuracy"] >= floor
+        verdict = "ok" if ok else "REGRESSED"
+        print(f"  {verdict:>9}: {key}  baseline "
+              f"{b['final_accuracy']:.4f} -> current "
+              f"{r['final_accuracy']:.4f}  (floor {floor:.4f})")
+        _note("BENCH_scenarios.json final_accuracy", key,
+              f"{r['final_accuracy']:.4f}", f"{b['final_accuracy']:.4f}",
+              f">= {floor:.4f}", ok)
+        if not ok:
+            failures.append(f"BENCH_scenarios.json final_accuracy {key}: "
+                            f"{r['final_accuracy']:.4f} < floor {floor:.4f}")
+    for key in set(base_rows) - seen:
+        print(f"  baseline row missing from current run: {key}")
+    return failures
+
+
+def check_async(current: dict, acc_budget: float = 0.02) -> list[str]:
+    """Async gate, self-relative within BENCH_async.json: under each
+    straggler profile, at least one async aggregator row must beat the
+    sync mean's simulated wall-clock (``sim_wall_clock_s``) while keeping
+    ``final_accuracy >= mean - acc_budget``.  No baseline file -- the claim
+    is about the aggregators relative to each other, so it holds or fails
+    on any machine at any budget."""
+    failures = []
+    by_profile: dict[str, dict[str, dict]] = {}
+    for r in current["rows"]:
+        by_profile.setdefault(r["profile"], {})[r["aggregator"]] = r
+    for profile in ("stragglers", "flaky_stragglers"):
+        rows = by_profile.get(profile)
+        if not rows or "mean" not in rows:
+            failures.append(f"BENCH_async.json: no mean row for "
+                            f"profile={profile}")
+            _note("BENCH_async.json async beats sync", profile, "missing",
+                  "mean row", "present", False)
+            continue
+        mean = rows["mean"]
+        acc_floor = mean["final_accuracy"] - acc_budget
+        winners = [a for a, r in rows.items() if a != "mean"
+                   and r["sim_wall_clock_s"] < mean["sim_wall_clock_s"]
+                   and r["final_accuracy"] >= acc_floor]
+        for a, r in sorted(rows.items()):
+            if a == "mean":
+                continue
+            print(f"  profile={profile} {a}: wall "
+                  f"{r['sim_wall_clock_s']:.3f}s vs mean "
+                  f"{mean['sim_wall_clock_s']:.3f}s, accuracy "
+                  f"{r['final_accuracy']:.4f} (floor {acc_floor:.4f})")
+        ok = bool(winners)
+        verdict = "ok" if ok else "FAILED"
+        best = min((rows[a]["sim_wall_clock_s"] for a in winners),
+                   default=float("nan"))
+        print(f"  {verdict:>9}: profile={profile}  async winners: "
+              f"{winners or 'none'}")
+        _note("BENCH_async.json async beats sync", profile,
+              f"{winners} (best wall {best:.3f}s)" if winners else "none",
+              f"mean wall {mean['sim_wall_clock_s']:.3f}s / "
+              f"acc {mean['final_accuracy']:.4f}",
+              f"wall < mean, acc >= mean - {acc_budget}", ok)
+        if not ok:
+            failures.append(
+                f"BENCH_async.json profile={profile}: no async aggregator "
+                f"beats mean's wall {mean['sim_wall_clock_s']:.3f}s within "
+                f"{acc_budget} accuracy of {mean['final_accuracy']:.4f}")
+    return failures
+
+
+def _load_pair(base_path: str, cur_path: str, label: str):
+    if os.path.exists(base_path) and os.path.exists(cur_path):
+        with open(base_path) as f:
+            baseline = json.load(f)
+        with open(cur_path) as f:
+            current = json.load(f)
+        return baseline, current
+    print(f"{label} gate skipped: {base_path} or {cur_path} not found")
+    return None, None
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_baseline.json")
@@ -141,8 +290,13 @@ def main() -> int:
     ap.add_argument("--population-baseline",
                     default="BENCH_population_baseline.json")
     ap.add_argument("--population-current", default="BENCH_population.json")
+    ap.add_argument("--scenarios-baseline",
+                    default="BENCH_scenarios_baseline.json")
+    ap.add_argument("--scenarios-current", default="BENCH_scenarios.json")
+    ap.add_argument("--async-current", default="BENCH_async.json")
     ap.add_argument("--tolerance", type=float, default=0.30,
-                    help="allowed fractional drop in device_steps_per_s")
+                    help="allowed fractional drop in device_steps_per_s "
+                         "(and absolute drop in gated accuracies)")
     args = ap.parse_args()
     with open(args.baseline) as f:
         baseline = json.load(f)
@@ -151,32 +305,35 @@ def main() -> int:
     print(f"bench regression gate: tolerance {args.tolerance:.0%} "
           f"({args.baseline} vs {args.current})")
     failures = check(baseline, current, args.tolerance)
-    if os.path.exists(args.tasks_baseline) and \
-            os.path.exists(args.tasks_current):
-        with open(args.tasks_baseline) as f:
-            tasks_baseline = json.load(f)
-        with open(args.tasks_current) as f:
-            tasks_current = json.load(f)
+    tasks_baseline, tasks_current = _load_pair(
+        args.tasks_baseline, args.tasks_current, "per-task")
+    if tasks_baseline is not None:
         print(f"per-task gate: tolerance {args.tolerance:.0%} "
               f"({args.tasks_baseline} vs {args.tasks_current})")
         failures += check_tasks(tasks_baseline, tasks_current,
                                 args.tolerance)
-    else:
-        print(f"per-task gate skipped: {args.tasks_baseline} or "
-              f"{args.tasks_current} not found")
-    if os.path.exists(args.population_baseline) and \
-            os.path.exists(args.population_current):
-        with open(args.population_baseline) as f:
-            pop_baseline = json.load(f)
-        with open(args.population_current) as f:
-            pop_current = json.load(f)
+    pop_baseline, pop_current = _load_pair(
+        args.population_baseline, args.population_current, "population")
+    if pop_baseline is not None:
         print(f"population gate: tolerance {args.tolerance:.0%} "
               f"({args.population_baseline} vs {args.population_current})")
         failures += check_population(pop_baseline, pop_current,
                                      args.tolerance)
+    scen_baseline, scen_current = _load_pair(
+        args.scenarios_baseline, args.scenarios_current, "scenario")
+    if scen_baseline is not None:
+        print(f"scenario gate: tolerance {args.tolerance:.0%} "
+              f"({args.scenarios_baseline} vs {args.scenarios_current})")
+        failures += check_scenarios(scen_baseline, scen_current,
+                                    args.tolerance)
+    if os.path.exists(args.async_current):
+        with open(args.async_current) as f:
+            async_current = json.load(f)
+        print(f"async gate (self-relative, {args.async_current})")
+        failures += check_async(async_current)
     else:
-        print(f"population gate skipped: {args.population_baseline} or "
-              f"{args.population_current} not found")
+        print(f"async gate skipped: {args.async_current} not found")
+    write_step_summary()
     if failures:
         print("bench regression gate FAILED:")
         for f_ in failures:

@@ -31,6 +31,8 @@ from .controller import (DDPGConfig, DDPGController, FleetDDPG,
                          make_ddpg_controllers, make_fleet_ddpg)
 from .population import (COHORT_SAMPLERS, Population, make_population,
                          make_population_task, run_population, sample_cohort)
+from .server import (AGGREGATORS, AggregatorSpec, ServerState, get_aggregator,
+                     init_server_state, window_deadline)
 from .convergence import ProblemConstants, corollary1_rate, theorem1_bound
 
 __all__ = [
@@ -50,4 +52,6 @@ __all__ = [
     "ProblemConstants", "corollary1_rate", "theorem1_bound",
     "COHORT_SAMPLERS", "Population", "make_population",
     "make_population_task", "run_population", "sample_cohort",
+    "AGGREGATORS", "AggregatorSpec", "ServerState", "get_aggregator",
+    "init_server_state", "window_deadline",
 ]

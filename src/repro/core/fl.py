@@ -78,6 +78,9 @@ from .scenario import (TAG_BATCH, TAG_CHANNEL, TAG_COHORT,  # noqa: F401
                        TAG_QUANT, TAG_REWARD, TAG_SCEN, TAG_SCEN_INIT,
                        Scenario, dropout_mask, get_scenario, init_carry,
                        sample_from_carry, step_carry, stream_key)
+from .server import (diloco_update, get_aggregator, init_server_state,
+                     semi_sync_sums, semi_sync_update, staleness_schedule,
+                     window_deadline)
 
 Array = jax.Array
 
@@ -122,6 +125,16 @@ class FLConfig:
     # repro.core.compressor.LAYER_POLICIES name ("uniform", "size_prop",
     # "divergence"); "uniform" is bit-equal to "global" on the exact backend
     layer_policy: str = "global"
+    # server aggregation (repro.core.server.AGGREGATORS): "mean" is today's
+    # synchronous path and keeps the engines bitwise on their original code;
+    # "diloco" adds a Nesterov outer step; "semi_sync" adds the bounded-
+    # staleness deadline server.  Contract in docs/ARCHITECTURE.md §11.
+    aggregator: str = "mean"
+    staleness_cap: int = 0             # semi_sync: max windows an update waits
+    staleness_alpha: float = 0.5       # semi_sync: w(s) = 1/(1+s)^alpha
+    deadline_factor: float = 1.25      # semi_sync: deadline = factor * median
+    outer_lr: float = 0.7              # diloco outer step size
+    outer_momentum: float = 0.9        # diloco outer Nesterov momentum
 
 
 @dataclasses.dataclass
@@ -209,6 +222,9 @@ class History:
     uplink_mb: list[float] = dataclasses.field(default_factory=list)
     rewards: list[float] = dataclasses.field(default_factory=list)
     drl_loss: list[float] = dataclasses.field(default_factory=list)
+    # simulated server wall-clock: sync aggregators advance it by the
+    # slowest syncing device's window time; semi_sync by min(deadline, that)
+    server_wall_s: list[float] = dataclasses.field(default_factory=list)
 
     def asdict(self):
         return dataclasses.asdict(self)
@@ -258,6 +274,15 @@ class LGCSimulator:
         key = jax.random.PRNGKey(cfg.seed)
         self.params = task.init(key)                 # global model  w_global
         self.d = tree_size(self.params)
+        # server aggregation mode (docs/ARCHITECTURE.md §11): "mean" keeps
+        # every engine on its original inline server code (bitwise rung);
+        # diloco/semi_sync thread a ServerState carry through the windows
+        self.agg = get_aggregator(cfg.aggregator)
+        self.server_state = (init_server_state(cfg, self.d)
+                             if self.agg.carries_state else None)
+        self.server_wall_s = 0.0                     # simulated f64, host-side
+        self._server_apply = (jax.jit(self._make_server_apply())
+                              if self.agg.name != "mean" else None)
         self.scenario = get_scenario(cfg.scenario)
         profiles = (list(cfg.device_profiles) if cfg.device_profiles
                     else self.scenario.device_profiles(self.m_devices))
@@ -348,6 +373,72 @@ class LGCSimulator:
                                    jnp.int32(t), rows)
         return [float(l) for l in np.asarray(losses)[: len(ms)]]
 
+    def _make_server_apply(self):
+        """Jitted non-mean server round for the loop engine: padded (N, d)
+        stacked updates in, (new_flat, ServerState, undelivered) out.  The
+        same :mod:`repro.core.server` math the batched window traces, so
+        the diloco/semi_sync loop~batched rung holds at float tolerance."""
+        cfg, m_total = self.cfg, self.m_devices
+        if self.agg.name == "diloco":
+            lr, mu = float(cfg.outer_lr), float(cfg.outer_momentum)
+
+            def apply(flat, state, g, mask, T, deadline):
+                fold = jnp.any(mask)
+                delta = jnp.sum(jnp.where(mask[:, None], g, 0.0),
+                                axis=0) / m_total
+                new_flat, state = diloco_update(flat, state, delta, fold,
+                                                lr, mu)
+                return new_flat, state, jnp.zeros_like(T)
+        else:  # semi_sync
+            alpha, cap = float(cfg.staleness_alpha), int(cfg.staleness_cap)
+
+            def apply(flat, state, g, mask, T, deadline):
+                fold = jnp.any(mask)
+                _, _, _, undeliv = staleness_schedule(T, deadline, mask,
+                                                      alpha, cap)
+                g_now, contrib, _ = semi_sync_sums(g, T, mask, deadline,
+                                                   alpha, cap)
+                new_flat, state = semi_sync_update(flat, state, g_now,
+                                                   contrib, fold, m_total)
+                return new_flat, state, undeliv
+        return apply
+
+    def _window_deadline(self, ms: Sequence[int]) -> float:
+        """Semi-sync uplink deadline for the sync set ``ms`` (host f64;
+        committed decisions + nominal channels + straggler profiles, so
+        every engine derives the identical number for the same window)."""
+        items = [(self.decisions[m].h, self.decisions[m].ks,
+                  self.profiles[m]) for m in ms]
+        if not items:
+            return 1.0
+        return window_deadline(self.cfg, self.mode, self.d, items)
+
+    def _apply_server_nonmean(self, updates, sync_ms, t32s, deadline: float):
+        """One diloco/semi_sync server round (loop engine): pad the sync
+        set to a power of two (compile-count bound, like _reward_losses),
+        apply the jitted server math, and hand the undelivered semi-sync
+        mass back to each device's EF -- mirroring the batched window's
+        in-program ``ef += undeliv * g``."""
+        n = len(updates)
+        size = 1 << max(0, (n - 1)).bit_length()
+        pad = size - n
+        g = jnp.stack(updates)
+        if pad:
+            g = jnp.concatenate(
+                [g, jnp.zeros((pad, self.d), jnp.float32)], axis=0)
+        mask = jnp.asarray([True] * n + [False] * pad)
+        T = jnp.asarray(list(t32s) + [np.float32(0.0)] * pad, jnp.float32)
+        flat = flatten_tree(self.params)
+        new_flat, self.server_state, undeliv = self._server_apply(
+            flat, self.server_state, g, mask, T, jnp.float32(deadline))
+        self.params = unflatten_like(new_flat, self.params)
+        if self.agg.name == "semi_sync":
+            un = np.asarray(undeliv)[:n]
+            for j, m in enumerate(sync_ms):
+                if un[j] > 0.0:
+                    self.ef[m] = EFState(self.ef[m].e
+                                         + float(un[j]) * updates[j])
+
     # -- helpers ------------------------------------------------------------
     def _eta(self, t: int) -> float:
         a = self.cfg.lr_decay_a
@@ -416,19 +507,31 @@ class LGCSimulator:
                 self.scen_carry = self._scen_step_all(self.scen_carry,
                                                       jnp.int32(t))
             eta = self._eta(t)
-            updates, sync_ms = [], []
+            updates, sync_ms, walls, t32s = [], [], [], []
             for m in range(self.m_devices):
                 batch = self._sample_batch(m, t)
                 self.w_hat[m] = self._sgd_step(self.w_hat[m], batch,
                                                jnp.float32(eta))
                 if t + 1 >= self.next_sync[m]:
-                    g, _ = self._sync_device(m, t)
+                    g, total, t32 = self._sync_device(m, t)
                     updates.append(g)
                     sync_ms.append(m)
+                    walls.append(total["time_s"])
+                    t32s.append(t32)
             if updates:
-                g_mean = sum(updates) / self.m_devices
-                flat = flatten_tree(self.params) - g_mean
-                self.params = unflatten_like(flat, self.params)
+                if self.agg.name == "mean":
+                    g_mean = sum(updates) / self.m_devices
+                    flat = flatten_tree(self.params) - g_mean
+                    self.params = unflatten_like(flat, self.params)
+                    self.server_wall_s += max(walls)
+                elif self.agg.name == "diloco":
+                    self._apply_server_nonmean(updates, sync_ms, t32s, 1.0)
+                    self.server_wall_s += max(walls)
+                else:  # semi_sync: the server never waits past the deadline
+                    deadline = self._window_deadline(sync_ms)
+                    self._apply_server_nonmean(updates, sync_ms, t32s,
+                                               deadline)
+                    self.server_wall_s += min(deadline, max(walls))
                 for m in sync_ms:
                     # broadcast: device adopts the global model
                     self.w_hat[m] = self.params
@@ -546,7 +649,11 @@ class LGCSimulator:
         }
         for k, v in total.items():
             self.spend[m][k] += v
-        return g, total
+        # f32 window time (comm + compute) exactly as the batched window
+        # traces it -- the semi-sync staleness input
+        t32 = np.float32(np.float32(cost["time_s"])
+                         + np.float32(ccomp["time_s"]))
+        return g, total, t32
 
     def _observe_devices(self, ms: Sequence[int], t: int):
         """Reward Eq. (14)-(16): utility = (loss drop) / (resource spend),
@@ -573,6 +680,7 @@ class LGCSimulator:
         hist.money.append(sum(s["money"] for s in self.spend))
         hist.time_s.append(max(s["time_s"] for s in self.spend))
         hist.uplink_mb.append(sum(s["mb"] for s in self.spend))
+        hist.server_wall_s.append(self.server_wall_s)
 
 
 def run_baseline(task: FLTask, cfg: FLConfig, mode: str,

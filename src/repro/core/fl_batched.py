@@ -80,6 +80,8 @@ from .compressor import (flatten_tree, layer_budgets, lgc_compress_topk,
                          unflatten_like)
 from .fl import (TAG_BATCH, TAG_CHANNEL, TAG_QUANT, History, stream_key)
 from .scenario import dropout_mask, sample_from_carry, step_carry
+from .server import (diloco_update, semi_sync_sums, semi_sync_update,
+                     staleness_schedule)
 
 Array = jax.Array
 
@@ -308,9 +310,14 @@ class BatchedEngine:
         # buffers each window.  params (arg 0) is NOT donated: run() keeps
         # params_before for mid-window eval records after the call.
         # tests/test_fl.py::TestBufferDonation pins the aliasing.
+        # Non-mean aggregators thread a ServerState carry as arg 5, chained
+        # and donated the same way (docs/ARCHITECTURE.md §11); "mean" keeps
+        # the original window signature and program byte-for-byte.
+        self.server_state = sim.server_state          # None under "mean"
+        donate = (1, 2, 3, 4) if sim.agg.name == "mean" else (1, 2, 3, 4, 5)
         self._window = jax.jit(self._make_window(),
                                static_argnames=("k_cap",),
-                               donate_argnums=(1, 2, 3, 4))
+                               donate_argnums=donate)
 
     # -- the one-XLA-program sync window ------------------------------------
     def _make_window(self, axis_name: str | None = None,
@@ -365,7 +372,83 @@ class BatchedEngine:
             anchor = jnp.where(sync_mask[:, None], new_flat[None], anchor)
             return new_params, w_hat, anchor, ef, scen_carry, costs
 
-        return window
+        agg = sim.agg.name
+        if agg == "mean":
+            return window
+
+        # -- non-mean aggregators: same device phase, a ServerState carry, --
+        # -- and the repro.core.server update in place of the plain mean   --
+        cfg = sim.cfg
+        alpha, cap = float(cfg.staleness_alpha), int(cfg.staleness_cap)
+        out_lr, out_mu = float(cfg.outer_lr), float(cfg.outer_momentum)
+
+        def window_ext(params, w_hat, anchor, ef, scen_carry, server_state,
+                       data, n_dev, dev_ids, ts, etas, valid, sync_mask,
+                       ks_mat, comp_time, deadline, *, k_cap):
+            """Extended window: ``comp_time`` is the (M_blk,) f32 per-device
+            compute seconds for this window's local steps, ``deadline`` the
+            replicated f32 semi-sync deadline; ``server_state`` is carried
+            replicated (every shard computes the identical new state)."""
+            w_hat, scen_carry, g_masked, ef, costs = device_phase(
+                w_hat, anchor, ef, scen_carry, data, n_dev, dev_ids,
+                ts, etas, valid, sync_mask, ks_mat, k_cap=k_cap)
+            T = costs[:, 2] + comp_time           # realised window seconds
+            if agg == "semi_sync":
+                # the fraction of each late device's update the server will
+                # never apply goes straight back into its EF residual --
+                # purely per-device, so shards compute it locally; gated so
+                # on-time/record-only rows stay bitwise untouched
+                _, _, _, undeliv = staleness_schedule(
+                    T, deadline, sync_mask, alpha, cap)
+                ef = jnp.where(undeliv[:, None] > 0,
+                               ef + undeliv[:, None] * g_masked, ef)
+            flat = flatten_tree(params)
+            if agg == "diloco":
+                if axis_name is None:
+                    g_sum = jnp.sum(g_masked, axis=0)
+                    fold = jnp.any(sync_mask)
+                elif server_reduce == "gather":
+                    g_sum = jnp.sum(jax.lax.all_gather(
+                        g_masked, axis_name, axis=0, tiled=True), axis=0)
+                    fold = jnp.any(jax.lax.all_gather(
+                        sync_mask, axis_name, axis=0, tiled=True))
+                else:
+                    g_sum = jax.lax.psum(jnp.sum(g_masked, axis=0),
+                                         axis_name)
+                    fold = jax.lax.psum(
+                        jnp.sum(sync_mask.astype(jnp.int32)), axis_name) > 0
+                new_flat, server_state = diloco_update(
+                    flat, server_state, g_sum / m, fold, out_lr, out_mu)
+            else:  # semi_sync
+                if axis_name is None:
+                    g_now, contrib, n_sync = semi_sync_sums(
+                        g_masked, T, sync_mask, deadline, alpha, cap)
+                elif server_reduce == "gather":
+                    gth = lambda x: jax.lax.all_gather(
+                        x, axis_name, axis=0, tiled=True)
+                    g_now, contrib, n_sync = semi_sync_sums(
+                        gth(g_masked), gth(T), gth(sync_mask),
+                        deadline, alpha, cap)
+                else:  # psum: the sums are linear in devices by construction
+                    g_now, contrib, n_sync = semi_sync_sums(
+                        g_masked, T, sync_mask, deadline, alpha, cap)
+                    g_now = jax.lax.psum(g_now, axis_name)
+                    contrib = jax.lax.psum(contrib, axis_name)
+                    n_sync = jax.lax.psum(n_sync, axis_name)
+                new_flat, server_state = semi_sync_update(
+                    flat, server_state, g_now, contrib, n_sync > 0, m)
+            new_params = unflatten_like(new_flat, params)
+            m_loc = sync_mask.shape[0]
+            w_hat = jax.tree_util.tree_map(
+                lambda wl, pl: jnp.where(
+                    sync_mask.reshape((m_loc,) + (1,) * pl.ndim), pl[None],
+                    wl),
+                w_hat, new_params)
+            anchor = jnp.where(sync_mask[:, None], new_flat[None], anchor)
+            return (new_params, w_hat, anchor, ef, scen_carry, server_state,
+                    costs)
+
+        return window_ext
 
     # -- host loop: chain windows, controllers decide at boundaries ---------
     def run(self) -> History:
@@ -388,12 +471,26 @@ class BatchedEngine:
                 jnp.float32)
             valid = jnp.asarray([True] * length + [False] * pad)
             params_before = sim.params
-            (sim.params, self.w_hat, self.anchor, self.ef, self.scen_carry,
-             costs) = self._window(
-                sim.params, self.w_hat, self.anchor, self.ef,
-                self.scen_carry, self.data, self.n_dev,
-                self.dev_ids, ts, etas, valid, self._sync_mask(te),
-                self._ks_mat(), k_cap=self._k_cap())
+            if sim.agg.name == "mean":
+                deadline = None
+                (sim.params, self.w_hat, self.anchor, self.ef,
+                 self.scen_carry, costs) = self._window(
+                    sim.params, self.w_hat, self.anchor, self.ef,
+                    self.scen_carry, self.data, self.n_dev,
+                    self.dev_ids, ts, etas, valid, self._sync_mask(te),
+                    self._ks_mat(), k_cap=self._k_cap())
+            else:
+                # host-side f64 deadline from committed decisions + nominal
+                # channels (identical across engines for the same sync set)
+                deadline = (sim._window_deadline(sync_ms)
+                            if sim.agg.uses_timing else 1.0)
+                (sim.params, self.w_hat, self.anchor, self.ef,
+                 self.scen_carry, self.server_state, costs) = self._window(
+                    sim.params, self.w_hat, self.anchor, self.ef,
+                    self.scen_carry, self.server_state, self.data,
+                    self.n_dev, self.dev_ids, ts, etas, valid,
+                    self._sync_mask(te), self._ks_mat(), self._comp_time(),
+                    jnp.float32(deadline), k_cap=self._k_cap())
             rec = [r for r in range(t, te)
                    if r % cfg.eval_every == 0 or r == cfg.rounds - 1]
             if rec and rec[-1] == te - 1:
@@ -408,6 +505,7 @@ class BatchedEngine:
                 sim.params = params_after
             if sync_ms:
                 costs_np = np.asarray(costs)
+                t_wins = []
                 for m in sync_ms:
                     # comp cost on host in f64, exactly like the loop engine
                     ccomp = comp_cost(sim.profiles[m], sim.decisions[m].h)
@@ -416,6 +514,14 @@ class BatchedEngine:
                     s["money"] += float(costs_np[m, 1]) + ccomp["money"]
                     s["time_s"] += float(costs_np[m, 2]) + ccomp["time_s"]
                     s["mb"] += float(costs_np[m, 3]) / 1e6
+                    t_wins.append(float(costs_np[m, 2]) + ccomp["time_s"])
+                # simulated server wall-clock (f64, from the same costs_np
+                # both sharded and unsharded runs see bitwise): sync servers
+                # wait for the slowest uplink, semi_sync for the deadline
+                if sim.agg.uses_timing:
+                    sim.server_wall_s += min(deadline, max(t_wins))
+                else:
+                    sim.server_wall_s += max(t_wins)
                 sim._observe_devices(sync_ms, te - 1)
                 sim._decide_devices(sync_ms, te)
             if last_rec:
@@ -425,6 +531,16 @@ class BatchedEngine:
 
     def _sync_mask(self, te: int) -> Array:
         return jnp.asarray([s <= te for s in self.sim.next_sync])
+
+    def _comp_time(self) -> Array:
+        """(M,) f32 compute seconds of each device's committed window (the
+        straggler-adjusted profile x local steps) -- the compute half of the
+        semi-sync staleness input, f32 like the in-window comm time."""
+        sim = self.sim
+        return jnp.asarray(
+            [np.float32(comp_cost(sim.profiles[m],
+                                  sim.decisions[m].h)["time_s"])
+             for m in range(self.m)], jnp.float32)
 
     def _k_cap(self) -> int:
         """Static top-k bound for the threshold-based layer selection,
@@ -495,12 +611,22 @@ class ShardedEngine(BatchedEngine):
 
         from jax.sharding import PartitionSpec as P
         shard, rep = P(self.axis), P()
-        # args: params, w_hat, anchor, ef, scen_carry, data (a batch pytree
-        #       -- the single spec applies leaf-wise as a prefix), n_dev,
-        #       dev_ids, ts, etas, valid, sync_mask, ks_mat
-        self._in_specs = (rep, shard, shard, shard, shard, shard,
-                          shard, shard, rep, rep, rep, shard, shard)
-        self._out_specs = (rep, shard, shard, shard, shard, shard)
+        if sim.agg.name == "mean":
+            # args: params, w_hat, anchor, ef, scen_carry, data (a batch
+            #       pytree -- the single spec applies leaf-wise as a
+            #       prefix), n_dev, dev_ids, ts, etas, valid, sync_mask,
+            #       ks_mat
+            self._in_specs = (rep, shard, shard, shard, shard, shard,
+                              shard, shard, rep, rep, rep, shard, shard)
+            self._out_specs = (rep, shard, shard, shard, shard, shard)
+        else:
+            # extended window: + the replicated ServerState carry after
+            # scen_carry, and the sharded (M,) comp_time + replicated
+            # deadline scalar at the tail (see _make_window's window_ext)
+            self._in_specs = (rep, shard, shard, shard, shard, rep, shard,
+                              shard, shard, rep, rep, rep, shard, shard,
+                              shard, rep)
+            self._out_specs = (rep, shard, shard, shard, shard, rep, shard)
         # pre-place the stacked state and data so every window call reuses
         # the resident shards instead of re-scattering from host
         place = lambda tree: jax.device_put(
@@ -510,6 +636,11 @@ class ShardedEngine(BatchedEngine):
         self.w_hat = place(self.w_hat)
         self.anchor, self.ef = place(self.anchor), place(self.ef)
         self.scen_carry = place(self.scen_carry)
+        if self.server_state is not None:
+            self.server_state = jax.device_put(
+                self.server_state, shardings(self.mesh, rep))
+        self._donate = ((1, 2, 3, 4) if sim.agg.name == "mean"
+                        else (1, 2, 3, 4, 5))
         self._programs: dict[int, Callable] = {}
         self._window = self._dispatch_window
 
@@ -525,6 +656,7 @@ class ShardedEngine(BatchedEngine):
                 out_specs=self._out_specs),
                 # same donation contract as the unsharded window: the
                 # chained (M, .) state updates in place, shard-resident
-                donate_argnums=(1, 2, 3, 4))
+                # (+ the ServerState carry under non-mean aggregators)
+                donate_argnums=self._donate)
             self._programs[k_cap] = fn
         return fn(*args)

@@ -60,6 +60,9 @@ from .fl import (FLConfig, FLTask, History, TAG_COHORT, TAG_EVAL,
                  get_scenario, stream_key)
 from .fl_batched import _stack_device_data, make_device_phase
 from .scenario import Scenario, ScenarioCarry, init_carry
+from .server import (diloco_update, get_aggregator, init_server_state,
+                     semi_sync_sums, semi_sync_update, staleness_schedule,
+                     window_deadline)
 
 Array = jax.Array
 
@@ -339,6 +342,40 @@ def run_population(pop: Population, cfg: FLConfig, mode: str = "lgc",
         flat = flatten_tree(params) - jnp.sum(g, axis=0) / g.shape[0]
         return unflatten_like(flat, params)
 
+    # non-mean aggregators (docs/ARCHITECTURE.md §11): the same single
+    # jitted server program for every blocking, so the sampled-cohort
+    # bitwise rung extends to diloco/semi_sync unchanged.  Every window
+    # the full cohort syncs, so the mask is all-true and the fold
+    # unconditional; the cohort (not N) normalises the aggregate.
+    agg = get_aggregator(cfg.aggregator)
+    server_state = init_server_state(cfg, d) if agg.carries_state else None
+    server_wall = 0.0
+    if agg.name != "mean":
+        alpha, cap = float(cfg.staleness_alpha), int(cfg.staleness_cap)
+        out_lr, out_mu = float(cfg.outer_lr), float(cfg.outer_momentum)
+
+        @functools.partial(jax.jit, donate_argnums=(1, 2))
+        def _apply_server_ext(params, g, ef, t_comm, comp32, deadline,
+                              state):
+            m_c = g.shape[0]
+            flat = flatten_tree(params)
+            if agg.name == "diloco":
+                new_flat, state = diloco_update(
+                    flat, state, jnp.sum(g, axis=0) / m_c, jnp.bool_(True),
+                    out_lr, out_mu)
+            else:  # semi_sync: late-update mass back to the cohort's EF
+                T = t_comm + comp32
+                mask = jnp.ones((m_c,), bool)
+                _, _, _, undeliv = staleness_schedule(T, deadline, mask,
+                                                      alpha, cap)
+                ef = jnp.where(undeliv[:, None] > 0,
+                               ef + undeliv[:, None] * g, ef)
+                g_now, contrib, _ = semi_sync_sums(g, T, mask, deadline,
+                                                   alpha, cap)
+                new_flat, state = semi_sync_update(
+                    flat, state, g_now, contrib, jnp.bool_(True), m_c)
+            return unflatten_like(new_flat, params), ef, state
+
     # shared keyed-subset eval (TAG_EVAL), mirroring LGCSimulator._record
     xe, ye = (jnp.asarray(task.eval_data[0]), jnp.asarray(task.eval_data[1]))
     n_eval = int(xe.shape[0])
@@ -426,7 +463,20 @@ def run_population(pop: Population, cfg: FLConfig, mode: str = "lgc",
             ts, etas, valid, sync_mask, ks_mat)
 
         params_before = params
-        params = _apply_server(params, g)
+        if agg.name == "mean":
+            deadline = None
+            params = _apply_server(params, g)
+        else:
+            profs = [scn.device_profile_at(int(i)) for i in ids]
+            deadline = (window_deadline(cfg, mode, d,
+                                        [(h, ks, p) for p in profs])
+                        if agg.uses_timing else 1.0)
+            comp32 = jnp.asarray(
+                [np.float32(comp_cost(p, h)["time_s"]) for p in profs],
+                jnp.float32)
+            params, ef_c, server_state = _apply_server_ext(
+                params, g, ef_c, costs[:, 2], comp32,
+                jnp.float32(deadline), server_state)
 
         def _rec(r, p_at):
             loss, acc = _eval_at(p_at, jnp.int32(r))
@@ -437,6 +487,7 @@ def run_population(pop: Population, cfg: FLConfig, mode: str = "lgc",
             hist.money.append(float(pop.spend[:, 1].sum()))
             hist.time_s.append(float(pop.spend[:, 2].max()))
             hist.uplink_mb.append(float(pop.spend[:, 3].sum()))
+            hist.server_wall_s.append(float(server_wall))
 
         # eval points falling mid-window precede this window's sync, so
         # they are recorded against the pre-window params AND pre-window
@@ -451,6 +502,7 @@ def run_population(pop: Population, cfg: FLConfig, mode: str = "lgc",
         pop.carry_good[ids] = np.asarray(carry_c.good)
         pop.participation[ids] += 1
         costs_np = np.asarray(costs, np.float64)
+        t_wins = []
         for j, i in enumerate(ids):
             ccomp = (comp if scn.straggler is None
                      else comp_cost(scn.device_profile_at(int(i)), h))
@@ -458,6 +510,12 @@ def run_population(pop: Population, cfg: FLConfig, mode: str = "lgc",
             pop.spend[i, 1] += costs_np[j, 1] + ccomp["money"]
             pop.spend[i, 2] += costs_np[j, 2] + ccomp["time_s"]
             pop.spend[i, 3] += costs_np[j, 3] / 1e6
+            t_wins.append(float(costs_np[j, 2]) + ccomp["time_s"])
+        # simulated server wall (f64 host math, identical per blocking):
+        # sync servers wait for the slowest cohort device, semi_sync for
+        # at most the window deadline
+        server_wall += (min(deadline, max(t_wins)) if agg.uses_timing
+                        else max(t_wins))
 
         if (te - 1) % cfg.eval_every == 0 or te - 1 == cfg.rounds - 1:
             _rec(te - 1, params)

@@ -1,0 +1,257 @@
+"""Server aggregation modes: the sync mean, DiLoCo, and semi-sync staleness.
+
+Every engine used to hard-code one server: wait for every syncing device,
+average, subtract.  Under ``gilbert_flaky`` bursts and straggler compute
+multipliers that sync barrier makes the *slowest* uplink set simulated
+wall-clock -- exactly the dynamic-environment cost LGC is meant to absorb
+(ROADMAP item 3).  This module is the registry of server aggregation modes
+(:data:`AGGREGATORS`) plus the pure jnp math each engine splices in at its
+server-update site:
+
+* ``mean`` -- today's path and the default.  The engines keep their original
+  inline code when ``cfg.aggregator == "mean"``, so the documented identity
+  rung -- ``aggregator="mean"`` AND ``staleness_cap=0`` is BITWISE equal to
+  the pre-server-subsystem ladder -- holds by construction
+  (tests/test_server.py::TestMeanIdentityRung pins it).
+
+* ``diloco`` -- DiLoCo-style outer optimisation (SNIPPETS.md snippet 2,
+  maxtext diloco.py; Douillard et al. 2023): devices still run their H
+  inner SGD steps and upload compressed net deltas, but the server treats
+  the cohort-averaged delta as an *outer gradient* and applies a Nesterov
+  momentum step (:func:`diloco_update`) with ``cfg.outer_lr`` /
+  ``cfg.outer_momentum``.  At ``outer_lr=1, outer_momentum=0`` the update
+  degenerates to the plain mean (pinned in tests).
+
+* ``semi_sync`` -- bounded-staleness semi-synchronous aggregation.  Each
+  sync window gets an uplink deadline derived from the scenario's channel /
+  compute state (:func:`window_deadline`: ``cfg.deadline_factor`` x the
+  median *nominal* window time of the syncing devices -- straggler compute
+  multipliers and nominal channel bandwidths both enter).  A device whose
+  realised window time T (comm time from the realised channel draw + local
+  compute time) exceeds the deadline is *late* by ``s = ceil(T/deadline)-1``
+  windows: its update misses this round, is buffered in the server-side
+  staleness ring (:class:`ServerState`.stale), and folds into the
+  aggregate ``s`` windows later scaled by the staleness weight
+
+      w(s) = 1 / (1 + s) ** cfg.staleness_alpha
+
+  up to ``cfg.staleness_cap`` windows.  Updates later than the cap are
+  dropped server-side.  The undelivered fraction -- ``1 - w(s)`` for
+  buffered updates, all of it for dropped ones -- is added back into the
+  device's error-feedback residual (building on the PR-4 dropout+EF
+  semantics: no update mass is ever silently lost,
+  tests/test_server.py::TestSemiSync).
+
+The math is split into *linear-in-devices partial sums*
+(:func:`semi_sync_sums`) and a *state update* (:func:`semi_sync_update`,
+:func:`diloco_update`) so the sharded engine can choose its collective:
+``server_reduce="gather"`` computes the sums on the all-gathered (M, D)
+matrices -- identical floats to the unsharded engine, keeping the
+batched==sharded rung bitwise -- while ``"psum"`` psums the (d,) /
+(cap, d) partials.  The staleness ring is part of the window-carried
+:class:`ServerState`, threaded through the chained window calls exactly
+like the scenario carry (replicated across shards).
+
+Simulated wall-clock (History.server_wall_s): the sync servers advance it
+by ``max_m T_m`` per window (slowest-uplink semantics) while ``semi_sync``
+advances it by ``min(deadline, max_m T_m)`` -- the server never waits past
+the deadline.  benchmarks/bench_async.py publishes the comparison per
+scenario into BENCH_async.json and benchmarks/check_regression.py gates it.
+
+The contract this module relaxes bit-identity into is documented in
+docs/ARCHITECTURE.md §11; tests/test_server.py enforces it (identity rung
+bitwise, diloco/semi_sync loop~batched allclose + batched==sharded bitwise
+in gather mode, convergence floors under the scenario zoo).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AggregatorSpec:
+    """One server aggregation mode (an :data:`AGGREGATORS` entry)."""
+    name: str
+    uses_timing: bool       # window needs per-device times + a deadline
+    carries_state: bool     # window threads a ServerState carry
+    doc: str
+
+
+AGGREGATORS: dict[str, AggregatorSpec] = {
+    "mean": AggregatorSpec(
+        "mean", uses_timing=False, carries_state=False,
+        doc="synchronous cohort mean (the default; bitwise-identical to the "
+            "pre-server-subsystem engines)"),
+    "diloco": AggregatorSpec(
+        "diloco", uses_timing=False, carries_state=True,
+        doc="H inner SGD steps per device, Nesterov-momentum outer step on "
+            "the averaged net delta (outer_lr / outer_momentum)"),
+    "semi_sync": AggregatorSpec(
+        "semi_sync", uses_timing=True, carries_state=True,
+        doc="per-window uplink deadline; late updates fold s windows later "
+            "with weight 1/(1+s)^alpha up to staleness_cap, EF carrying the "
+            "undelivered mass"),
+}
+
+
+def get_aggregator(name: str) -> AggregatorSpec:
+    """Resolve a registry name, raising on unknown aggregators."""
+    try:
+        return AGGREGATORS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown aggregator {name!r}; registered: "
+            f"{sorted(AGGREGATORS)}") from None
+
+
+class ServerState(NamedTuple):
+    """Server-side optimiser state threaded across sync windows.
+
+    ``momentum`` is the DiLoCo outer Nesterov momentum (zeros under other
+    aggregators); ``stale`` is the semi-sync staleness ring: row ``j`` holds
+    the weighted update mass that folds into the aggregate ``j + 1``
+    server rounds from now (shape ``(staleness_cap, d)``; a zero cap gives
+    an empty ring and every late update is dropped to EF).  Replicated
+    across shards -- every shard computes the identical new state.
+    """
+    momentum: Array     # (d,) f32
+    stale: Array        # (cap, d) f32
+
+
+def init_server_state(cfg, d: int) -> ServerState:
+    """Zero state sized for ``cfg`` (cap rows only under semi_sync)."""
+    cap = int(cfg.staleness_cap) if cfg.aggregator == "semi_sync" else 0
+    if cfg.staleness_cap < 0:
+        raise ValueError(f"staleness_cap must be >= 0, got "
+                         f"{cfg.staleness_cap}")
+    return ServerState(momentum=jnp.zeros((d,), jnp.float32),
+                       stale=jnp.zeros((cap, d), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# deadline (host-side, engine-shared): nominal window time of the cohort
+# ---------------------------------------------------------------------------
+
+def nominal_uplink_s(cfg, mode: str, ks: Sequence[int], d: int) -> float:
+    """Nominal (spec-bandwidth, all-channels-up) uplink seconds for one
+    device's committed budgets -- layers travel in parallel, so the max
+    across channels, mirroring :func:`repro.core.channels.comm_cost`."""
+    bws = [c.bandwidth_mb_s for c in cfg.channels]
+    if mode == "fedavg":
+        return d * cfg.value_bytes / 1e6 / max(bws)
+    ks = list(ks)
+    if mode == "topk":
+        ks = [sum(ks)] + [0] * (len(ks) - 1)
+    vb = 1 if mode == "lgc_q8" else cfg.value_bytes
+    return max(k * (vb + cfg.index_bytes) / 1e6 / bw
+               for k, bw in zip(ks, bws))
+
+
+def window_deadline(cfg, mode: str, d: int, items) -> float:
+    """The semi-sync uplink deadline for one window, from the scenario's
+    channel/compute state: ``cfg.deadline_factor`` x the median nominal
+    window time (compute + nominal uplink) over the syncing devices.
+
+    ``items`` is ``[(h, ks, profile), ...]`` for the syncing cohort --
+    committed decisions plus the (straggler-adjusted) compute profiles.
+    Host-side f64 and a deterministic median, so every engine derives the
+    identical deadline for the identical sync set."""
+    times = [p.comp_time_per_step_s * h + nominal_uplink_s(cfg, mode, ks, d)
+             for h, ks, p in items]
+    return max(float(cfg.deadline_factor) * float(np.median(times)), 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# pure jnp server math (traced inside the window programs)
+# ---------------------------------------------------------------------------
+
+def staleness_schedule(T: Array, deadline: Array, mask: Array,
+                       alpha: float, cap: int):
+    """Per-device staleness bookkeeping for one window.
+
+    Returns ``(s, w, on_time, undelivered)``: lateness in windows
+    ``s = max(ceil(T/deadline) - 1, 0)`` (f32-valued integers), the fold
+    weight ``w(s) = 1/(1+s)^alpha``, the on-time mask, and the fraction of
+    each device's update the server will never apply (0 on time,
+    ``1 - w(s)`` while buffered, 1 past the cap) -- the EF add-back.
+    Purely per-device, so shards evaluate it locally."""
+    dl = jnp.maximum(deadline, 1e-9)
+    s = jnp.maximum(jnp.ceil(T / dl) - 1.0, 0.0)
+    s = jnp.where(mask, s, 0.0)
+    on = mask & (s == 0.0)
+    w = 1.0 / (1.0 + s) ** alpha
+    undeliv = jnp.where(on | ~mask, 0.0,
+                        jnp.where(s <= cap, 1.0 - w, 1.0))
+    return s, w, on, undeliv
+
+
+def semi_sync_sums(g: Array, T: Array, mask: Array, deadline: Array,
+                   alpha: float, cap: int):
+    """Linear-in-devices partial sums of the semi-sync fold.
+
+    ``g``: (M_blk, d) masked updates; returns ``(g_now, contrib, n_sync)``
+    -- the on-time aggregate (d,), the staleness-ring deposits (cap, d)
+    (row j gets ``w(j+1) * g`` of the devices exactly j+1 windows late),
+    and the synced-device count.  All three are sums over the device axis,
+    so the psum reduce can combine shard-local partials; the gather reduce
+    calls this once on the full gathered matrices instead, reproducing the
+    unsharded floats exactly."""
+    s, w, on, _ = staleness_schedule(T, deadline, mask, alpha, cap)
+    g_now = jnp.sum(jnp.where(on[:, None], g, 0.0), axis=0)
+    sel = mask & (s >= 1.0) & (s <= cap)
+    wsel = jnp.where(sel, w, 0.0)
+    onehot = jax.nn.one_hot(s.astype(jnp.int32) - 1, cap, dtype=g.dtype)
+    contrib = (onehot * wsel[:, None]).T @ g
+    n_sync = jnp.sum(mask.astype(jnp.int32))
+    return g_now, contrib, n_sync
+
+
+def semi_sync_update(flat: Array, state: ServerState, g_now: Array,
+                     contrib: Array, fold: Array, m_total: int):
+    """Apply one semi-sync server round to the flat global model.
+
+    Folds the maturing ring row into the on-time aggregate, shifts the ring
+    and deposits this window's late contributions, and subtracts the
+    cohort-normalised aggregate.  ``fold`` gates everything: a window where
+    no device syncs must leave params and the ring bitwise untouched (the
+    batched engine's record-only windows have no loop-engine counterpart).
+    """
+    cap = state.stale.shape[0]
+    if cap:
+        g_apply = g_now + state.stale[0]
+        shifted = jnp.concatenate(
+            [state.stale[1:], jnp.zeros_like(state.stale[:1])], axis=0)
+        state = state._replace(
+            stale=jnp.where(fold, shifted + contrib, state.stale))
+    else:
+        g_apply = g_now
+    new_flat = flat - jnp.where(fold, g_apply, jnp.zeros_like(g_apply)) \
+        / m_total
+    return new_flat, state
+
+
+def diloco_update(flat: Array, state: ServerState, delta: Array,
+                  fold: Array, outer_lr: float, outer_mu: float):
+    """One Nesterov-momentum outer step on the averaged net delta.
+
+    The maxtext diloco.py idiom: the cohort-averaged parameter delta is the
+    outer gradient; ``m' = mu m + delta``, ``params -= lr (delta + mu m')``.
+    With ``outer_lr=1, outer_mu=0`` this is exactly the plain mean
+    (``0 * m'`` is an exact zero), which tests pin.  ``fold`` gates the
+    no-sync windows like :func:`semi_sync_update`."""
+    mom_new = outer_mu * state.momentum + delta
+    step = outer_lr * (delta + outer_mu * mom_new)
+    new_flat = flat - jnp.where(fold, step, jnp.zeros_like(step))
+    return new_flat, state._replace(
+        momentum=jnp.where(fold, mom_new, state.momentum))

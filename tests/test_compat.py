@@ -1,0 +1,98 @@
+"""Tests for the launch/compat version shims.
+
+``ensure_fast_cpu_runtime`` is the load-bearing PR-7 path: it decides,
+from the jaxlib version and the process environment, whether the
+``--xla_cpu_use_thunk_runtime=false`` flag is appended to ``XLA_FLAGS``
+before backend init (docs/ARCHITECTURE.md §10).  A wrong decision is
+either a 37x slowdown (flag missing on 0.4.3x) or a hard startup crash
+(unknown flag on >= 0.5), so the version gate's *boundaries* are pinned
+here with mocked jaxlib versions -- the function reads
+``jaxlib.__version__`` at call time, which is what makes it mockable.
+"""
+from __future__ import annotations
+
+import jaxlib
+import pytest
+
+from repro.launch.compat import ensure_fast_cpu_runtime
+
+FLAG = "--xla_cpu_use_thunk_runtime=false"
+
+
+@pytest.fixture
+def clean_env(monkeypatch):
+    """No XLA_FLAGS, no opt-out: the decision rests on the version gate."""
+    monkeypatch.delenv("XLA_FLAGS", raising=False)
+    monkeypatch.delenv("REPRO_XLA_THUNK_RUNTIME", raising=False)
+    return monkeypatch
+
+
+class TestVersionGate:
+    """The flag applies exactly on [0.4.32, 0.5.0) -- the jaxlib line that
+    ships both runtimes.  Outside it the flag is unknown to XLA (hard
+    startup error), so both boundaries matter."""
+
+    @pytest.mark.parametrize("version,expected", [
+        ("0.4.31", False),    # pre-thunk-runtime: nothing to opt out of
+        ("0.4.32", True),     # first thunk-runtime release
+        ("0.4.37", True),     # the pinned CI container
+        ("0.4.38.dev20250101", True),   # dev builds parse by numeric prefix
+        ("0.5.0", False),     # legacy runtime removed; flag now fatal
+        ("0.6.1", False),
+    ])
+    def test_boundary(self, clean_env, version, expected):
+        clean_env.setattr(jaxlib, "__version__", version)
+        import os
+        assert ensure_fast_cpu_runtime() is expected
+        assert (FLAG in os.environ.get("XLA_FLAGS", "")) is expected
+
+    def test_unparseable_version_is_a_noop(self, clean_env):
+        clean_env.setattr(jaxlib, "__version__", "weekly-nightly")
+        import os
+        assert ensure_fast_cpu_runtime() is False
+        assert "XLA_FLAGS" not in os.environ
+
+
+class TestOptOut:
+    def test_env_opt_out_wins_over_version(self, clean_env):
+        clean_env.setattr(jaxlib, "__version__", "0.4.37")
+        clean_env.setenv("REPRO_XLA_THUNK_RUNTIME", "1")
+        import os
+        assert ensure_fast_cpu_runtime() is False
+        assert "XLA_FLAGS" not in os.environ
+
+    def test_opt_out_only_honours_exactly_1(self, clean_env):
+        clean_env.setattr(jaxlib, "__version__", "0.4.37")
+        clean_env.setenv("REPRO_XLA_THUNK_RUNTIME", "0")
+        assert ensure_fast_cpu_runtime() is True
+
+
+class TestIdempotence:
+    def test_second_call_does_not_duplicate_the_flag(self, clean_env):
+        clean_env.setattr(jaxlib, "__version__", "0.4.35")
+        import os
+        assert ensure_fast_cpu_runtime() is True
+        flags_after_first = os.environ["XLA_FLAGS"]
+        assert ensure_fast_cpu_runtime() is True
+        assert os.environ["XLA_FLAGS"] == flags_after_first
+        assert flags_after_first.count(FLAG) == 1
+
+    def test_flag_already_present_short_circuits_any_version(self, clean_env):
+        # a caller (or CI lane) that already set the flag wins outright,
+        # even on a jaxlib where the gate itself would say no
+        clean_env.setattr(jaxlib, "__version__", "0.5.0")
+        clean_env.setenv("XLA_FLAGS", f"--some_other_flag {FLAG}")
+        import os
+        before = os.environ["XLA_FLAGS"]
+        assert ensure_fast_cpu_runtime() is True
+        assert os.environ["XLA_FLAGS"] == before
+
+    def test_existing_xla_flags_content_is_preserved(self, clean_env):
+        clean_env.setattr(jaxlib, "__version__", "0.4.33")
+        clean_env.setenv(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+        import os
+        assert ensure_fast_cpu_runtime() is True
+        flags = os.environ["XLA_FLAGS"].split()
+        assert "--xla_force_host_platform_device_count=8" in flags
+        assert FLAG in flags
