@@ -1,5 +1,6 @@
-"""Task zoo sweep: throughput + smoke-budget accuracy for every registry
-task (repro.models.paper_models.TASKS) on the batched engine.
+"""Task zoo sweep: throughput + smoke-budget accuracy for every engine
+task (repro.models.paper_models.ENGINE_TASKS) on the batched engine
+(qwen2_100m is not an FLTask; its frontier lives in bench_100m.py).
 
 The perf trajectory (BENCH_sim.json, BENCH_sharded.json) has so far only
 ever measured ``lr_mnist``; the paper's evaluation (§4.1) spans LR, CNN and
@@ -35,7 +36,7 @@ from repro.core.compressor import (LAYER_POLICIES, flatten_tree,
                                    layer_budgets, per_layer_wire_bytes,
                                    tree_layer_slices, wire_bytes)
 from repro.core.fl_batched import BatchedEngine
-from repro.models.paper_models import TASKS, make_task
+from repro.models.paper_models import ENGINE_TASKS, make_task
 
 from .bench_sharded_scaling import _steady_window_rate
 from .common import emit
@@ -77,7 +78,9 @@ def _policy_wire_bytes(task, ks, cfg) -> dict:
 
 def run(tasks=None, m: int = 8, rounds: int = 40, batch_size: int = 32,
         emit_csv: bool = True) -> dict:
-    names = list(tasks or TASKS)
+    # the FLTask zoo only: qwen2_100m is not an engine task (its frontier
+    # is bench_100m.py), so default to ENGINE_TASKS, not the full registry
+    names = list(tasks or ENGINE_TASKS)
     rows = []
     for name in names:
         task = make_task(name, m_devices=m, **_TASK_KW.get(name, {}))

@@ -1,6 +1,6 @@
 """Bench regression gate: fail CI when simulator throughput slows down.
 
-Five gates, each naming the metric and file that tripped:
+Six gates, each naming the metric and file that tripped:
 
 * **engine gate** -- the batched-engine ``device_steps_per_s`` rows of a
   freshly generated BENCH_sim.json vs the committed BENCH_baseline.json,
@@ -22,6 +22,14 @@ Five gates, each naming the metric and file that tripped:
   This is the DDPG-vs-fixed accuracy table: a controller change that
   quietly costs accuracy under ``gilbert_flaky`` or ``diurnal_cycle``
   trips here, not in a throughput number;
+* **100M gate** -- the (aggregate, sparsity) frontier rows of
+  BENCH_100m.json vs the committed BENCH_100m_baseline.json:
+  ``wire_bytes_per_round_per_device`` must not grow past
+  baseline * (1 + tolerance) (the analytic uplink budget is exact, so a
+  trip means the k-budget clamp or the wire accounting changed) and
+  ``loss_decrease`` must stay positive and above
+  baseline * (1 - tolerance) (the 100M stack exists to learn under
+  compression, not just to move fewer bytes);
 * **async gate** -- self-relative within BENCH_async.json (no baseline
   file): under the straggler profiles ("stragglers",
   "flaky_stragglers" -- the ISSUE's "gilbert_flaky + stragglers") some
@@ -52,6 +60,7 @@ Refresh them (the recipe also lives in README.md's benchmarking section):
     cp BENCH_tasks.json BENCH_tasks_baseline.json
     cp BENCH_population.json BENCH_population_baseline.json
     cp BENCH_scenarios.json BENCH_scenarios_baseline.json
+    cp BENCH_100m.json BENCH_100m_baseline.json
 
 BENCH_async.json needs no baseline copy: its gate is self-relative.
 """
@@ -220,6 +229,59 @@ def check_scenarios(baseline: dict, current: dict, tolerance: float
     return failures
 
 
+def check_100m(baseline: dict, current: dict, tolerance: float
+               ) -> list[str]:
+    """100M gate: (aggregate, sparsity)-keyed frontier rows of
+    BENCH_100m.json.  Wire bytes are analytic (exact, no runner jitter) so
+    the ceiling catches any change to the k-budget clamp or the wire
+    accounting; loss_decrease must stay positive and within tolerance of
+    the committed baseline so the compressed stack keeps learning."""
+    base_rows = {(r["aggregate"], r["sparsity"]): r
+                 for r in baseline["rows"]}
+    seen, failures = set(), []
+    for r in current["rows"]:
+        key = (r["aggregate"], r["sparsity"])
+        seen.add(key)
+        b = base_rows.get(key)
+        if b is None:
+            print(f"  new row (no baseline): {key}  wire "
+                  f"{r['wire_bytes_per_round_per_device']} B, "
+                  f"loss_decrease {r['loss_decrease']:.4f}")
+            continue
+        wire_ceil = b["wire_bytes_per_round_per_device"] * (1.0 + tolerance)
+        loss_floor = max(0.0, b["loss_decrease"] * (1.0 - tolerance))
+        bad_wire = r["wire_bytes_per_round_per_device"] > wire_ceil
+        bad_loss = not (r["loss_decrease"] > 0
+                        and r["loss_decrease"] >= loss_floor)
+        verdict = "REGRESSED" if (bad_wire or bad_loss) else "ok"
+        print(f"  {verdict:>9}: {key}  wire "
+              f"{b['wire_bytes_per_round_per_device']} -> "
+              f"{r['wire_bytes_per_round_per_device']} B "
+              f"(ceiling {wire_ceil:.0f})  loss_decrease "
+              f"{b['loss_decrease']:.4f} -> {r['loss_decrease']:.4f} "
+              f"(floor {loss_floor:.4f})")
+        _note("BENCH_100m.json wire_bytes_per_round_per_device", key,
+              str(r["wire_bytes_per_round_per_device"]),
+              str(b["wire_bytes_per_round_per_device"]),
+              f"<= {wire_ceil:.0f}", not bad_wire)
+        _note("BENCH_100m.json loss_decrease", key,
+              f"{r['loss_decrease']:.4f}", f"{b['loss_decrease']:.4f}",
+              f"> 0 and >= {loss_floor:.4f}", not bad_loss)
+        if bad_wire:
+            failures.append(
+                f"BENCH_100m.json wire_bytes {key}: "
+                f"{r['wire_bytes_per_round_per_device']} > ceiling "
+                f"{wire_ceil:.0f}")
+        if bad_loss:
+            failures.append(
+                f"BENCH_100m.json loss_decrease {key}: "
+                f"{r['loss_decrease']:.4f} not > 0 and >= floor "
+                f"{loss_floor:.4f}")
+    for key in set(base_rows) - seen:
+        print(f"  baseline row missing from current run: {key}")
+    return failures
+
+
 def check_async(current: dict, acc_budget: float = 0.02) -> list[str]:
     """Async gate, self-relative within BENCH_async.json: under each
     straggler profile, at least one async aggregator row must beat the
@@ -293,6 +355,9 @@ def main() -> int:
     ap.add_argument("--scenarios-baseline",
                     default="BENCH_scenarios_baseline.json")
     ap.add_argument("--scenarios-current", default="BENCH_scenarios.json")
+    ap.add_argument("--hundredm-baseline",
+                    default="BENCH_100m_baseline.json")
+    ap.add_argument("--hundredm-current", default="BENCH_100m.json")
     ap.add_argument("--async-current", default="BENCH_async.json")
     ap.add_argument("--tolerance", type=float, default=0.30,
                     help="allowed fractional drop in device_steps_per_s "
@@ -326,6 +391,12 @@ def main() -> int:
               f"({args.scenarios_baseline} vs {args.scenarios_current})")
         failures += check_scenarios(scen_baseline, scen_current,
                                     args.tolerance)
+    hm_baseline, hm_current = _load_pair(
+        args.hundredm_baseline, args.hundredm_current, "100M")
+    if hm_baseline is not None:
+        print(f"100M gate: tolerance {args.tolerance:.0%} "
+              f"({args.hundredm_baseline} vs {args.hundredm_current})")
+        failures += check_100m(hm_baseline, hm_current, args.tolerance)
     if os.path.exists(args.async_current):
         with open(args.async_current) as f:
             async_current = json.load(f)

@@ -57,9 +57,12 @@ def main() -> None:
                     help="path for the population EF-store rows")
     ap.add_argument("--async-json", default="BENCH_async.json",
                     help="path for the server-aggregator wall/accuracy rows")
+    ap.add_argument("--hundredm-json", default="BENCH_100m.json",
+                    help="path for the 100M-stack wire/throughput frontier")
     args = ap.parse_args()
 
-    from benchmarks import (bench_async, bench_compressor_throughput,
+    from benchmarks import (bench_100m, bench_async,
+                            bench_compressor_throughput,
                             bench_controller_scaling,
                             bench_convergence_bound, bench_fig3_lr_mnist,
                             bench_fig5_drl, bench_fig6_rnn_shakespeare,
@@ -86,6 +89,8 @@ def main() -> None:
                      n_devices=100_000, m_cohort=64, rounds=24)  # EF stores
         asynch = _step("async", bench_async.run,
                        m=8, rounds=60, n_train=1500)             # aggregators
+        hundredm = _step("lgc_100m", bench_100m.run,
+                         preset="smoke", m_devices=4, rounds=6)  # 100M stack
         _step("fig3_lr_mnist", bench_fig3_lr_mnist.run,
               model="lr", rounds=40, n_train=1200)
     else:
@@ -102,6 +107,8 @@ def main() -> None:
                      n_devices=100_000, m_cohort=64, rounds=80)
         asynch = _step("async", bench_async.run,
                        m=16, rounds=120, n_train=2000)
+        hundredm = _step("lgc_100m", bench_100m.run,
+                         preset="smoke", m_devices=8, rounds=12)
         _step("fig3_lr_mnist", bench_fig3_lr_mnist.run,
               model="lr", rounds=100, n_train=2000)              # Fig 3
         _step("fig4_cnn_mnist", bench_fig3_lr_mnist.run,
@@ -124,6 +131,8 @@ def main() -> None:
         json.dump(popn, f, indent=1)
     with open(args.async_json, "w") as f:
         json.dump(asynch, f, indent=1)
+    with open(args.hundredm_json, "w") as f:
+        json.dump(hundredm, f, indent=1)
 
 
 if __name__ == '__main__':

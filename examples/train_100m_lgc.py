@@ -1,91 +1,84 @@
-"""End-to-end driver: train a ~100M-parameter qwen2-family model for a few
-hundred steps with LGC gradient compression across 8 simulated FL devices.
+"""End-to-end driver: train the qwen2_100m federated task for a few
+hundred sync rounds with LGC gradient compression across 8 simulated FL
+devices.
 
-This is the real training path (actual arrays, actual shard_map step --
-the same code the dry-run lowers for the production mesh), running on 8
-host devices.  Loss must decrease; the script also reports the LGC wire
-savings vs a dense exchange.
+This drives the registry task (``make_task("qwen2_100m", ...)``), i.e. the
+real shard_map train step the dry-run lowers for the production mesh,
+running on 8 host devices.  Loss must decrease; the script also reports
+the LGC wire savings vs a dense exchange.
 
-  PYTHONPATH=src python examples/train_100m_lgc.py [--steps 300]
+  PYTHONPATH=src python examples/train_100m_lgc.py --preset smoke --steps 2
+  PYTHONPATH=src python examples/train_100m_lgc.py [--steps 300]   # ~128M
 """
 import argparse
-import os
 
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+# The seed version did os.environ.setdefault("XLA_FLAGS", ...), which is a
+# no-op whenever XLA_FLAGS is inherited (e.g. a CI lane exporting only
+# --xla_cpu_use_thunk_runtime=false) -- the mesh build then dies with
+# "Number of devices 1 must be >= 8".  force_host_device_count rewrites the
+# device-count flag while preserving the rest, and composes with
+# ensure_fast_cpu_runtime regardless of call order (tests/test_compat.py).
+from repro.launch.compat import force_host_device_count
 
-import dataclasses
-import time
+force_host_device_count(8)
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_config
-from repro.data.tokens import TokenPipeline
-from repro.launch import sharding_rules as rules
-from repro.launch import compat
-from repro.launch.mesh import make_host_mesh
-from repro.launch.steps import (LGCStepConfig, init_ef_tree,
-                                make_lgc_train_step)
-from repro.models import transformer as tf
-
-
-def hundred_m_config():
-    """qwen2-family scaled to ~100M params."""
-    base = get_config("qwen2-1.5b")
-    return dataclasses.replace(
-        base, name="qwen2-100m", n_layers=8, d_model=512, n_heads=8,
-        n_kv_heads=2, d_ff=2048, vocab_size=32_000, tie_embeddings=True,
-        remat=False, attn_q_chunk=128, loss_chunk=256)
+from repro.models.paper_models import make_task  # noqa: E402
 
 
 def main():
     ap = argparse.ArgumentParser()
     # defaults sized for the 1-core CPU container; on a real pod raise all
     ap.add_argument("--steps", type=int, default=200)
-    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--preset", default="full", choices=["full", "smoke"])
+    ap.add_argument("--batch-per-device", type=int, default=2)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--local-lr", type=float, default=3e-3)
+    ap.add_argument("--sparsity", default="0.01,0.02,0.02")
+    ap.add_argument("--aggregate", default="sparse_gather",
+                    choices=["dense_masked", "sparse_gather",
+                             "bucket_sparse", "none"])
+    ap.add_argument("--backend", default="exact",
+                    choices=["exact", "pallas"],
+                    help="pallas = fused Pallas compression kernels on the "
+                         ">=PALLAS_MIN_ELEMS dense-path leaves (interpret "
+                         "mode on CPU: parity, not speed)")
+    ap.add_argument("--scenario", default=None,
+                    help="e.g. gilbert_flaky for lossy multi-channel uplinks")
     args = ap.parse_args()
 
-    cfg = hundred_m_config()
-    mesh = make_host_mesh(8, model=1)       # 8 FL devices on the data axis
-    compat.set_mesh(mesh)
-    params = tf.init_params(cfg, jax.random.PRNGKey(0))
-    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
-    print(f"{cfg.name}: {n/1e6:.1f}M params, 8 FL devices, "
-          f"H={args.local_steps} local steps, sparsity 1%+2%+2%")
+    task = make_task("qwen2_100m", m_devices=8, scenario=args.scenario,
+                     preset=args.preset,
+                     sparsity=tuple(float(x)
+                                    for x in args.sparsity.split(",")),
+                     aggregate=args.aggregate, local_steps=args.local_steps,
+                     local_lr=args.local_lr,
+                     batch_per_device=args.batch_per_device, seq=args.seq,
+                     backend=args.backend)
+    n = task.param_count()
+    print(f"{task.name}: {n/1e6:.1f}M params, {task.m_devices} FL devices, "
+          f"H={args.local_steps} local steps, sparsity {args.sparsity}, "
+          f"aggregate {args.aggregate}")
 
-    lgc = LGCStepConfig(local_steps=args.local_steps, local_lr=3e-3,
-                        sparsity=(0.01, 0.02, 0.02))
-    pipe = TokenPipeline(cfg.vocab_size, args.seq, args.batch, seed=0)
-    x0, y0 = pipe.next_batch()
-    batch0 = {"tokens": jnp.asarray(x0), "labels": jnp.asarray(y0)}
-    bspecs = rules.batch_specs(cfg, batch0, mesh)
-    pspecs = rules.param_specs(cfg, params, mesh)
-    params = rules.place(params, pspecs, mesh)
-    step = jax.jit(make_lgc_train_step(cfg, mesh, lgc, bspecs),
-                   in_shardings=compat.shardings(mesh, (pspecs, pspecs, bspecs)),
-                   donate_argnums=(0, 1))
-    ef = rules.place(init_ef_tree(params), pspecs, mesh)
+    out = task.run(args.steps, log_every=20)
+    losses = out["losses"]
 
-    t0, losses = time.time(), []
-    for i in range(args.steps):
-        x, y = pipe.next_batch()
-        params, ef, loss = step(params, ef,
-                                {"tokens": jnp.asarray(x),
-                                 "labels": jnp.asarray(y)})
-        losses.append(float(loss))
-        if i % 20 == 0 or i == args.steps - 1:
-            print(f"round {i:4d} loss {losses[-1]:.4f} "
-                  f"({time.time()-t0:.0f}s)")
-
-    dense_mb = n * 4 / 1e6
-    lgc_mb = n * sum(lgc.sparsity) * 8 / 1e6   # (val+idx) per selected coord
+    from repro.launch.steps import lgc_wire_bytes_per_round  # jax now warm
+    import jax
+    from repro.models import transformer as tf
+    import jax.numpy as jnp
+    p = jax.eval_shape(lambda k: tf.init_params(task.arch, k),
+                       jax.ShapeDtypeStruct((2,), jnp.uint32))
+    wire = lgc_wire_bytes_per_round(p, task.step_cfg)
+    dense_mb = wire["none"] / 1e6
+    lgc_mb = max(wire[args.aggregate], 1) / 1e6
     print(f"\nwire per round per device: dense {dense_mb:.1f} MB vs "
           f"LGC {lgc_mb:.1f} MB  ({dense_mb/lgc_mb:.1f}x reduction)")
     if args.steps >= 20:
         assert losses[-1] < losses[0], "loss must decrease"
-    print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} over {args.steps} rounds")
+    print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"over {args.steps} rounds "
+          f"({out['device_steps_per_s']:.2f} device-steps/s)")
 
 
 if __name__ == "__main__":

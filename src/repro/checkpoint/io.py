@@ -19,16 +19,37 @@ import numpy as np
 
 
 def _leaf_to_numpy(x) -> tuple[np.ndarray, str]:
-    x = jax.device_get(x)
+    # np.asarray AFTER device_get: python scalars (step counters in
+    # training-state trees) have no .dtype and crashed the seed version
+    x = np.asarray(jax.device_get(x))
     if x.dtype == jnp.bfloat16:
-        return np.asarray(x).view(np.uint16), "bfloat16"
-    return np.asarray(x), str(x.dtype)
+        return x.view(np.uint16), "bfloat16"
+    return x, str(x.dtype)
 
 
-def _numpy_to_leaf(arr: np.ndarray, tag: str):
+def _numpy_to_leaf(arr: np.ndarray, tag: str, like_leaf=None):
+    """Restore one leaf bit-exactly.
+
+    The seed version did ``jnp.asarray(arr.astype(tag))``, which silently
+    downcasts int64/float64 blobs (python-scalar leaves) when jax runs
+    with x64 disabled -- not a round-trip.  Python-scalar template leaves
+    are restored as python scalars; everything else must come back with
+    exactly the dtype it was saved with.
+    """
     if tag == "bfloat16":
         return jnp.asarray(arr.view(jnp.bfloat16))
-    return jnp.asarray(arr.astype(tag))
+    if str(arr.dtype) != tag:
+        raise ValueError(f"checkpoint blob dtype {arr.dtype} != manifest "
+                         f"tag {tag!r} (corrupt checkpoint?)")
+    if isinstance(like_leaf, (int, float)) and not isinstance(
+            like_leaf, (np.generic, np.ndarray)) and arr.ndim == 0:
+        return type(like_leaf)(arr.item())
+    out = jnp.asarray(arr)
+    if str(out.dtype) != tag:
+        # x64-disabled jax cannot hold this dtype; keep the numpy array
+        # rather than silently truncating bits
+        return arr
+    return out
 
 
 def save_checkpoint(directory: str, step: int, tree) -> str:
@@ -55,10 +76,20 @@ def load_checkpoint(directory: str, step: int, like):
     leaves_like, treedef = jax.tree_util.tree_flatten(like)
     assert manifest["n_leaves"] == len(leaves_like), \
         f"checkpoint has {manifest['n_leaves']} leaves, template has {len(leaves_like)}"
+    if manifest.get("treedef") != str(treedef):
+        raise ValueError(
+            "checkpoint treedef does not match template structure "
+            "(same leaf count, different tree) -- refusing to restore "
+            "into the wrong pytree layout")
     leaves = []
-    for i, tag in enumerate(manifest["dtypes"]):
+    for i, (tag, tmpl) in enumerate(zip(manifest["dtypes"], leaves_like)):
         arr = np.load(os.path.join(path, f"arr_{i:05d}.npy"))
-        leaves.append(_numpy_to_leaf(arr, tag))
+        want = list(np.shape(tmpl))
+        if manifest["shapes"][i] != want:
+            raise ValueError(
+                f"leaf {i}: checkpoint shape {manifest['shapes'][i]} != "
+                f"template shape {want}")
+        leaves.append(_numpy_to_leaf(arr, tag, tmpl))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 

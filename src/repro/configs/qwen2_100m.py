@@ -1,0 +1,29 @@
+"""Qwen2-family ~128M-parameter config for the federated 100M LGC stack.
+
+This is the registry home of the config that used to live privately in
+``examples/train_100m_lgc.py`` (whose seed version actually built a 47M
+model).  At d_model=768 / 12 layers / 32k tied vocab the flattened
+gradient tree is ~1.28e8 elements -- past ``PALLAS_MIN_ELEMS`` on every
+matmul leaf, i.e. real LGC-kernel territory (docs/ARCHITECTURE.md §12).
+"""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-100m", arch_type="dense",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+    d_ff=3072, vocab_size=32_000,
+    qkv_bias=True, tie_embeddings=True,
+    mlp="swiglu", norm="rmsnorm",
+    remat=False, attn_q_chunk=128, loss_chunk=256,
+    source="arXiv:2407.10671 (scaled)",
+)
+
+
+def smoke() -> ArchConfig:
+    """Tiny same-shape variant for tests and the CI docs lane."""
+    return dataclasses.replace(
+        CONFIG, name="qwen2-100m-smoke", n_layers=2, d_model=128, n_heads=4,
+        n_kv_heads=2, d_ff=256, vocab_size=512, attn_q_chunk=64,
+        loss_chunk=64)

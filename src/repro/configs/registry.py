@@ -13,6 +13,7 @@ _MODULES = {
     "mamba2-370m": "mamba2_370m",
     "phi-3-vision-4.2b": "phi3_vision_4b",
     "qwen2-1.5b": "qwen2_1_5b",
+    "qwen2-100m": "qwen2_100m",
     "grok-1-314b": "grok1_314b",
     "zamba2-1.2b": "zamba2_1_2b",
     "starcoder2-7b": "starcoder2_7b",

@@ -93,13 +93,16 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                            "fedavg": "none"}[mode])
             step = make_lgc_train_step(cfg, mesh, lgc, batch_specs,
                                        param_spec_tree=pspecs)
+            n_fl = dict(zip(mesh.axis_names, mesh.devices.shape))[fl_ax]
             ef_sds = jax.eval_shape(
                 lambda p: jax.tree_util.tree_map(
-                    lambda x: jnp.zeros(x.shape, jnp.dtype(lgc.ef_dtype)), p),
+                    lambda x: jnp.zeros((n_fl,) + x.shape,
+                                        jnp.dtype(lgc.ef_dtype)), p),
                 params_sds)
+            especs = rules.ef_specs(pspecs, fl_ax)
             jitted = jax.jit(step,
-                             in_shardings=compat.shardings(mesh, (pspecs, pspecs, batch_specs)),
-                             out_shardings=compat.shardings(mesh, (pspecs, pspecs, P())))
+                             in_shardings=compat.shardings(mesh, (pspecs, especs, batch_specs)),
+                             out_shardings=compat.shardings(mesh, (pspecs, especs, P())))
             args = (params_sds, ef_sds, specs)
         n_tokens = shape.global_batch * shape.seq_len
 

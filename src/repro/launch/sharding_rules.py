@@ -154,9 +154,22 @@ def cache_specs(cfg: ArchConfig, cache: Tree, mesh) -> Tree:
     return jax.tree_util.tree_map_with_path(rule, cache)
 
 
-def ef_specs(param_spec_tree: Tree) -> Tree:
-    """Error-feedback memory: same layout as params."""
-    return param_spec_tree
+def ef_specs(param_spec_tree: Tree, fl_ax: str | None = None) -> Tree:
+    """Error-feedback memory specs.
+
+    With ``fl_ax`` (the stacked ``(n_fl, *leaf)`` convention of
+    :func:`repro.launch.steps.init_ef_tree`): the leading axis is the FL
+    device axis, sharded over ``fl_ax``; the per-param dims keep the
+    param's own layout shifted right by one.  Without ``fl_ax`` (legacy,
+    non-stacked): same layout as params.
+    """
+    if fl_ax is None:
+        return param_spec_tree
+    return jax.tree_util.tree_map(
+        lambda s: jax.sharding.PartitionSpec(
+            fl_ax, *(ax if ax != fl_ax else None for ax in s)),
+        param_spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
 
 
 def place(tree: Tree, spec_tree: Tree, mesh) -> Tree:

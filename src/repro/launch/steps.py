@@ -24,9 +24,12 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.core.compressor import PALLAS_MIN_ELEMS
+from repro.kernels import lgc_compress_hist
 from repro.kernels import ref as kref
 from repro.models import transformer as tf
 from repro.optim.optimizers import (OptimizerConfig, apply_updates,
@@ -60,6 +63,18 @@ class LGCStepConfig:
     # AllReducePromotion pass aborts on bf16 all-reduce ("Invalid binary
     # instruction opcode copy") -- flip to "bfloat16" on real TPU.
     psum_dtype: str = "float32"
+    # "pallas" routes dense-path leaves of >= pallas_min_elems elements
+    # through the fused kernels.lgc_compress_hist pipeline (bit-identical
+    # to the kref oracle -- tests/test_kernels.py); smaller leaves stay on
+    # the oracle either way.  "exact" keeps everything on the oracle.
+    # pallas_interpret=True is the CPU parity mode; flip off on real TPU.
+    backend: str = "exact"
+    pallas_min_elems: int = PALLAS_MIN_ELEMS
+    pallas_interpret: bool = True
+
+    @property
+    def n_channels(self) -> int:
+        return len(self.sparsity)
 
 
 # ---------------------------------------------------------------------------
@@ -105,18 +120,49 @@ def make_sync_train_step(cfg: ArchConfig, *, accum_steps: int = 1,
 # LGC training step (Algorithm 1 on the mesh)
 # ---------------------------------------------------------------------------
 
-def _leaf_cum_ks(size: int, sparsity: Sequence[float]) -> jnp.ndarray:
+def _leaf_ks(size: int, sparsity: Sequence[float]) -> list[int]:
+    """Per-channel k budgets, cumulatively clamped to the leaf size.
+
+    The naive ``max(1, int(size * f))`` floor lets the *cumulative* budget
+    exceed the leaf for small leaves (a 64-element bias at sparsity
+    (0.01, 0.02, 0.02) requests 3 coords; a 2-element leaf requests 3):
+    the overflow channels then get degenerate (zero) thresholds and their
+    bands either truncate or double-cover coordinates.  Clamping the
+    cumulative sum keeps the channels disjoint by construction: channel c
+    owns ranks [cum[c-1], cum[c]) and trailing channels degrade to k=0
+    (empty band, no collective payload) once the leaf is exhausted.
+    Pinned by tests/test_lgc_step.py::TestSmallLeafBudgets.
+    """
     ks = [max(1, int(size * f)) for f in sparsity]
-    return jnp.array(jnp.cumsum(jnp.array(ks, jnp.int32)), jnp.int32)
+    cum = np.minimum(np.cumsum(ks), size)
+    return np.diff(np.concatenate([[0], cum])).tolist()
 
 
-def _compress_leaf_dense(e: Array, delta: Array, sparsity) -> tuple[Array, Array]:
-    """Histogram-LGC on one tensor; returns (g, e_new) with leaf's shape."""
+def _leaf_cum_ks(size: int, sparsity: Sequence[float]) -> jnp.ndarray:
+    return jnp.asarray(np.cumsum(_leaf_ks(size, sparsity)), jnp.int32)
+
+
+def _compress_leaf_dense(e: Array, delta: Array, sparsity, recv: Array,
+                         *, backend: str = "exact",
+                         pallas_min_elems: int = PALLAS_MIN_ELEMS,
+                         interpret: bool = True) -> tuple[Array, Array]:
+    """Histogram-LGC on one tensor; returns (g, e_new) with leaf's shape.
+
+    ``recv`` is this FL device's (C,) per-channel delivery mask: masked
+    channels contribute nothing to the wire sum and their mass stays in
+    the error memory.  Leaves of >= ``pallas_min_elems`` elements route
+    through the fused Pallas pipeline when ``backend == "pallas"`` -- at
+    qwen2_100m scale that is every matmul leaf (ARCHITECTURE.md §12).
+    """
     shape = delta.shape
-    u = (e + delta.astype(jnp.float32)).reshape(-1)
-    cum_ks = _leaf_cum_ks(u.shape[0], sparsity)
-    recv = jnp.ones((len(sparsity),), jnp.int32)
-    g, e_new = kref.hist_lgc_compress(jnp.zeros_like(u), u, cum_ks, recv)
+    e_flat = e.reshape(-1).astype(jnp.float32)
+    d_flat = delta.reshape(-1).astype(jnp.float32)
+    cum_ks = _leaf_cum_ks(d_flat.shape[0], sparsity)
+    if backend == "pallas" and d_flat.shape[0] >= pallas_min_elems:
+        g, e_new = lgc_compress_hist(e_flat, d_flat, cum_ks, recv,
+                                     interpret=interpret)
+    else:
+        g, e_new = kref.hist_lgc_compress(e_flat, d_flat, cum_ks, recv)
     return g.reshape(shape), e_new.reshape(shape)
 
 
@@ -130,8 +176,9 @@ def _model_axis_of(spec) -> int | None:
     return None
 
 
-def _compress_leaf_sparse(e: Array, delta: Array, sparsity, fl_ax: str,
-                          n_fl: int, spec=None) -> tuple[Array, Array]:
+def _compress_leaf_sparse(e: Array, delta: Array, sparsity, recv: Array,
+                          fl_ax: str, n_fl: int, spec=None
+                          ) -> tuple[Array, Array]:
     """Layered sparse exchange: per channel, all_gather fixed-k (val, idx).
 
     Each LGC layer is an independent collective -- the multi-channel
@@ -162,8 +209,8 @@ def _compress_leaf_sparse(e: Array, delta: Array, sparsity, fl_ax: str,
     # per-row magnitude histogram -> per-row layer thresholds (all local)
     mx = jax.vmap(kref.hist_maxabs)(u)                     # (rows,)
     counts = jax.vmap(kref.hist_counts)(u, mx)             # (rows, 256)
-    ks = [max(1, int(cols * f)) for f in sparsity]
-    cum = jnp.cumsum(jnp.array(ks, jnp.int32))
+    ks = _leaf_ks(cols, sparsity)            # cumulative clamp: see _leaf_ks
+    cum = jnp.asarray(np.cumsum(ks), jnp.int32)
     thr = jax.vmap(lambda c, m: kref.hist_thresholds(c, m, cum)
                    )(counts, mx)                           # (rows, C)
     a = jnp.abs(u)
@@ -172,10 +219,18 @@ def _compress_leaf_sparse(e: Array, delta: Array, sparsity, fl_ax: str,
     g_own = jnp.zeros_like(u)
     g_sum = jnp.zeros_like(u)
     for c, k_c in enumerate(ks):
+        if k_c == 0:
+            # channel budget exhausted by the clamp: empty band on every
+            # device (ks is host-side, so all shards skip the collective)
+            continue
         band = jnp.where((a <= hi[:, c:c + 1]) & (a > thr[:, c:c + 1]), a, 0.0)
         k_eff = min(k_c + max(1, cols // kref.N_BINS), cols)
         bvals, idx = jax.lax.top_k(band, k_eff)            # (rows, k_eff)
-        vals = jnp.take_along_axis(u, idx, 1) * (bvals > 0)
+        # bvals==0 slots are top_k ties on empty band positions: masking
+        # their values dedupes the (arbitrary) repeated indices, and the
+        # recv mask drops undelivered channels (their mass stays in EF)
+        vals = (jnp.take_along_axis(u, idx, 1) * (bvals > 0)
+                * recv[c].astype(jnp.float32))
         if ax is not None:
             vals = maybe_constrain(vals, "model", None)
             idx = maybe_constrain(idx, "model", None)
@@ -201,8 +256,9 @@ def _compress_leaf_sparse(e: Array, delta: Array, sparsity, fl_ax: str,
     return g_mean.reshape(shape), e_new.reshape(shape)
 
 
-def _compress_leaf_bucket(e: Array, delta: Array, sparsity, fl_ax: str,
-                          n_fl: int, spec=None) -> tuple[Array, Array]:
+def _compress_leaf_bucket(e: Array, delta: Array, sparsity, recv: Array,
+                          fl_ax: str, n_fl: int, spec=None
+                          ) -> tuple[Array, Array]:
     """Bucketed layered selection (perf iteration I-C6, beyond-paper).
 
     ``lax.top_k`` lowers to a sort, and XLA's sort partitioning replicates a
@@ -226,7 +282,7 @@ def _compress_leaf_bucket(e: Array, delta: Array, sparsity, fl_ax: str,
     else:
         u = u0.reshape(1, -1)
     rows, cols = u.shape
-    ks = [max(1, int(cols * f)) for f in sparsity]
+    ks = _leaf_ks(cols, sparsity)            # cumulative clamp: see _leaf_ks
     k_total = sum(ks)
     bucket = max(cols // k_total, 1)
     k_eff = cols // bucket
@@ -239,18 +295,24 @@ def _compress_leaf_bucket(e: Array, delta: Array, sparsity, fl_ax: str,
         vals = maybe_constrain(vals, "model", None)
         idx = maybe_constrain(idx, "model", None)
 
-    g_own = jnp.zeros_like(u)
-    g_own = jax.vmap(lambda g, i, v: g.at[i].add(v))(g_own, idx, vals)
     # one all_gather per channel-layer: channel c carries buckets
-    # [sum(ks[:c]), sum(ks[:c+1])) -- disjoint layers, separate collectives
+    # [sum(ks[:c]), sum(ks[:c+1])) -- disjoint layers, separate collectives.
+    # g_own accumulates ONLY the delivered slices: buckets past the channel
+    # budget (k_eff > k_total) or on a masked channel are never transmitted,
+    # so their mass must stay in the error memory (the seed code credited
+    # every bucket to g_own, silently leaking the untransmitted tail).
+    g_own = jnp.zeros_like(u)
     g_sum = jnp.zeros_like(u)
     lo = 0
-    for k_c in ks:
+    for c, k_c in enumerate(ks):
         hi = min(lo + k_c, k_eff)
         if hi <= lo:
             break
-        v_all = jax.lax.all_gather(vals[:, lo:hi], fl_ax)  # (n_fl, rows, k_c)
-        i_all = jax.lax.all_gather(idx[:, lo:hi], fl_ax)
+        v_c = vals[:, lo:hi] * recv[c].astype(jnp.float32)
+        i_c = idx[:, lo:hi]
+        g_own = jax.vmap(lambda g, i, v: g.at[i].add(v))(g_own, i_c, v_c)
+        v_all = jax.lax.all_gather(v_c, fl_ax)             # (n_fl, rows, k_c)
+        i_all = jax.lax.all_gather(i_c, fl_ax)
         for fl in range(n_fl):
             g_sum = jax.vmap(lambda g, i, v: g.at[i].add(v)
                              )(g_sum, i_all[fl], v_all[fl])
@@ -266,16 +328,32 @@ def _compress_leaf_bucket(e: Array, delta: Array, sparsity, fl_ax: str,
 
 def make_lgc_train_step(cfg: ArchConfig, mesh, step_cfg: LGCStepConfig,
                         batch_spec_tree, param_spec_tree=None):
-    """Algorithm 1: returns f(params, ef, batch) -> (params, ef, metrics).
+    """Algorithm 1: returns f(params, ef, batch, received=None)
+    -> (params, ef, metrics).
 
     Server update is plain subtraction (Alg. 1 line 21); the optimizer lives
     on the devices as plain SGD (line 6), exactly as in the paper.
     ``param_spec_tree`` (optional) enables shard-aligned sparse selection
     in the sparse_gather mode (see _compress_leaf_sparse).
+
+    The error-feedback tree uses the stacked ``(n_fl, *leaf)`` convention
+    (:func:`init_ef_tree`), sharded ``P(fl_ax)``: each FL device owns its
+    own residual row.  The seed code kept per-device EF under a replicated
+    ``P()`` spec -- undefined with ``check_rep=False``, and ``device_get``
+    (and therefore every checkpoint) silently collapsed it to shard 0's
+    residual (tests/test_checkpoint.py pins the round-trip).
+
+    ``received`` (optional, (n_fl, C) int) is the per-device per-channel
+    delivery mask for the sync round -- the multi-channel availability the
+    paper's scenarios drive (gilbert_flaky etc.).  Masked channels are
+    never transmitted; their mass stays in the device's error memory (the
+    same dropout+EF rule the engines use).  ``None`` means all delivered.
+    The FedAvg baseline (aggregate="none") has no channels and ignores it.
     """
     fl_ax = fl_axis_name(mesh)
     n_fl = dict(zip(mesh.axis_names, mesh.devices.shape))[fl_ax]
     h = step_cfg.local_steps
+    n_ch = step_cfg.n_channels
 
     def loss_fn(p, mb):
         return tf.lm_loss(p, cfg, mb)
@@ -291,13 +369,22 @@ def make_lgc_train_step(cfg: ArchConfig, mesh, step_cfg: LGCStepConfig,
         manual_batch_spec, batch_spec_tree,
         is_leaf=lambda x: isinstance(x, P))
 
-    def step(params, ef, batch):
+    dense_kw = dict(backend=step_cfg.backend,
+                    pallas_min_elems=step_cfg.pallas_min_elems,
+                    interpret=step_cfg.pallas_interpret)
+
+    def step(params, ef, batch, received=None):
+        if received is None:
+            received = jnp.ones((n_fl, n_ch), jnp.int32)
+
         @functools.partial(
             compat.shard_map, mesh=mesh,
-            in_specs=(P(), P(), batch_in_specs),
-            out_specs=(P(), P(), P()),
+            in_specs=(P(), P(fl_ax), batch_in_specs, P(fl_ax)),
+            out_specs=(P(), P(fl_ax), P()),
             axis_names={fl_ax})
-        def inner(params, ef, batch):
+        def inner(params, ef_stack, batch, received):
+            ef = jax.tree_util.tree_map(lambda x: x[0], ef_stack)
+            recv = received[0].astype(jnp.int32)      # (C,) own channels
             # ---- H local SGD steps (Alg. 1 line 6) -----------------------
             b_local = jax.tree_util.tree_leaves(batch)[0].shape[0]
             assert b_local % h == 0 and b_local >= h, (
@@ -333,12 +420,12 @@ def make_lgc_train_step(cfg: ArchConfig, mesh, step_cfg: LGCStepConfig,
                 if param_spec_tree is not None:
                     pairs = jax.tree_util.tree_map(
                         lambda e, dl, sp: _compress_leaf_bucket(
-                            e, dl, step_cfg.sparsity, fl_ax, n_fl, sp),
+                            e, dl, step_cfg.sparsity, recv, fl_ax, n_fl, sp),
                         ef, delta, param_spec_tree)
                 else:
                     pairs = jax.tree_util.tree_map(
                         lambda e, dl: _compress_leaf_bucket(
-                            e, dl, step_cfg.sparsity, fl_ax, n_fl),
+                            e, dl, step_cfg.sparsity, recv, fl_ax, n_fl),
                         ef, delta)
                 g_mean = jax.tree_util.tree_map(
                     lambda t: t[0], pairs,
@@ -350,12 +437,13 @@ def make_lgc_train_step(cfg: ArchConfig, mesh, step_cfg: LGCStepConfig,
                 if param_spec_tree is not None:
                     pairs = jax.tree_util.tree_map(
                         lambda e, dl, sp: _compress_leaf_sparse(
-                            e, dl, step_cfg.sparsity, fl_ax, n_fl, sp),
+                            e, dl, step_cfg.sparsity, recv, fl_ax, n_fl, sp),
                         ef, delta, param_spec_tree)
                 else:
                     pairs = jax.tree_util.tree_map(
                         lambda e, dl: _compress_leaf_sparse(
-                            e, dl, step_cfg.sparsity, fl_ax, n_fl), ef, delta)
+                            e, dl, step_cfg.sparsity, recv, fl_ax, n_fl),
+                        ef, delta)
                 g_mean = jax.tree_util.tree_map(
                     lambda t: t[0], pairs,
                     is_leaf=lambda t: isinstance(t, tuple))
@@ -365,7 +453,8 @@ def make_lgc_train_step(cfg: ArchConfig, mesh, step_cfg: LGCStepConfig,
             else:                                      # dense_masked
                 pairs = jax.tree_util.tree_map(
                     lambda e, dl: _compress_leaf_dense(
-                        e, dl, step_cfg.sparsity), ef, delta)
+                        e, dl, step_cfg.sparsity, recv, **dense_kw),
+                    ef, delta)
                 g = jax.tree_util.tree_map(
                     lambda t: t[0], pairs,
                     is_leaf=lambda t: isinstance(t, tuple))
@@ -388,17 +477,45 @@ def make_lgc_train_step(cfg: ArchConfig, mesh, step_cfg: LGCStepConfig,
                 lambda w, gm: (w.astype(jnp.float32) - gm).astype(w.dtype),
                 params, g_mean)
             ef_new = jax.tree_util.tree_map(
-                lambda x: x.astype(jnp.dtype(step_cfg.ef_dtype)), ef_new)
+                lambda x: x.astype(jnp.dtype(step_cfg.ef_dtype))[None],
+                ef_new)
             return params_new, ef_new, loss
 
-        return inner(params, ef, batch)
+        return inner(params, ef, batch, received)
 
     return step
 
 
-def init_ef_tree(params, dtype=jnp.float32):
+def init_ef_tree(params, n_fl: int = 1, dtype=jnp.float32):
+    """Stacked per-FL-device error-feedback tree: leaves are
+    ``(n_fl, *param_shape)`` -- row m is device m's residual (the same
+    stacked (M, .) convention the batched engines use).  Shard the leading
+    axis ``P(fl_axis)`` via :func:`repro.launch.sharding_rules.ef_specs`.
+    """
     return jax.tree_util.tree_map(
-        lambda p: jnp.zeros(p.shape, dtype), params)
+        lambda p: jnp.zeros((n_fl,) + p.shape, dtype), params)
+
+
+def lgc_wire_bytes_per_round(params, step_cfg: LGCStepConfig,
+                             value_bytes: int = 4, index_bytes: int = 4
+                             ) -> dict[str, int]:
+    """Per-device uplink bytes for one sync round, by aggregate mode.
+
+    Uses the clamped per-leaf channel budgets (:func:`_leaf_ks`), so small
+    leaves never over-report.  ``dense_masked`` moves the full dense tensor
+    through the psum (the masking saves nothing on the wire -- that is the
+    point of the sparse/bucket modes); ``none`` is the FedAvg baseline.
+    """
+    leaves = [int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params)]
+    k_total = sum(sum(_leaf_ks(n, step_cfg.sparsity)) for n in leaves)
+    d_total = sum(leaves)
+    psum_bytes = jnp.dtype(step_cfg.psum_dtype).itemsize
+    return {
+        "none": d_total * value_bytes,
+        "dense_masked": d_total * psum_bytes,
+        "sparse_gather": k_total * (value_bytes + index_bytes),
+        "bucket_sparse": k_total * (value_bytes + index_bytes),
+    }
 
 
 # ---------------------------------------------------------------------------

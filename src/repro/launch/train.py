@@ -105,9 +105,13 @@ def main():
             local_lr=args.lr,
             aggregate={"lgc": "dense_masked", "lgc_sparse": "sparse_gather",
                        "fedavg": "none"}[args.mode])
-        ef = init_ef_tree(params)
+        from repro.launch.mesh import fl_axis_name
+        fl_ax = fl_axis_name(mesh)
+        n_fl = dict(zip(mesh.axis_names, mesh.devices.shape))[fl_ax]
+        especs = rules.ef_specs(pspecs, fl_ax)
+        ef = rules.place(init_ef_tree(params, n_fl), especs, mesh)
         step = jax.jit(make_lgc_train_step(cfg, mesh, lgc, bspecs),
-                       in_shardings=compat.shardings(mesh, (pspecs, pspecs, bspecs)),
+                       in_shardings=compat.shardings(mesh, (pspecs, especs, bspecs)),
                        donate_argnums=(0, 1))
         for i in range(args.steps):
             x, y = pipe.next_batch()

@@ -218,14 +218,31 @@ def make_shakespeare_task(m_devices: int = 3, seq: int = 48, seed: int = 0,
 @dataclasses.dataclass(frozen=True)
 class TaskSpec:
     """One registry workload: which model/dataset, and the partition the
-    task defaults to when no scenario overrides it."""
+    task defaults to when no scenario overrides it.
+
+    ``dataset="tokens"`` marks the big-model stack: its factory returns an
+    :class:`repro.models.lgc_transformer.LGCTransformerTask` (the shard_map
+    LGC engine itself) instead of an ``FLTask`` for the stacked engines --
+    at 1.28e8 parameters an (M, d) stacked tree is not a thing you
+    materialise.  See docs/ARCHITECTURE.md §12.
+    """
     name: str
-    model: str              # "lr" | "cnn" | "gru"
-    dataset: str            # "mnist" | "shakespeare"
+    model: str              # "lr" | "cnn" | "gru" | "qwen2"
+    dataset: str            # "mnist" | "shakespeare" | "tokens"
     partition: str          # default data sharding (scenario= overrides)
 
+    @property
+    def is_engine_task(self) -> bool:
+        """True when ``make`` returns an FLTask the loop/batched/sharded
+        engines can run (the tokens-backed tasks are their own engine)."""
+        return self.dataset != "tokens"
+
     def make(self, m_devices: int = 3, seed: int = 0,
-             scenario: str | Scenario | None = None, **kw) -> FLTask:
+             scenario: str | Scenario | None = None, **kw):
+        if self.dataset == "tokens":
+            from repro.models.lgc_transformer import make_qwen2_100m_task
+            return make_qwen2_100m_task(m_devices, seed=seed,
+                                        scenario=scenario, **kw)
         kw.setdefault("partition", self.partition)
         if self.dataset == "mnist":
             return make_mnist_task(self.model, m_devices, seed=seed,
@@ -244,14 +261,22 @@ TASKS: dict[str, TaskSpec] = {
     "rnn_shakespeare": TaskSpec("rnn_shakespeare", model="gru",
                                 dataset="shakespeare",
                                 partition="dirichlet"),
+    # the production-scale stack (ROADMAP item 2): ~128M-param qwen2 behind
+    # the shard_map LGC step, FL axis x model axis on one mesh
+    "qwen2_100m": TaskSpec("qwen2_100m", model="qwen2", dataset="tokens",
+                           partition="iid"),
 }
+
+ENGINE_TASKS: tuple[str, ...] = tuple(
+    sorted(n for n, s in TASKS.items() if s.is_engine_task))
 
 
 def make_task(name: str, m_devices: int = 3, seed: int = 0,
-              scenario: str | Scenario | None = None, **kw) -> FLTask:
+              scenario: str | Scenario | None = None, **kw):
     """One entry point for the whole zoo: resolve a registry name and build
     the task (``scenario=`` shapes the data exactly as in the per-dataset
-    factories; extra kwargs pass through, e.g. ``n_train``/``seq``)."""
+    factories; extra kwargs pass through, e.g. ``n_train``/``seq``, or
+    ``preset``/``sparsity``/``aggregate`` for ``qwen2_100m``)."""
     try:
         spec = TASKS[name]
     except KeyError:

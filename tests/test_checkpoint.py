@@ -1,0 +1,153 @@
+"""Checkpoint round-trip tests (repro.checkpoint.io).
+
+The seed io module predates the stacked (M, .) error-feedback convention
+and broke on the real qwen2_100m training state in three ways, each pinned
+here: (1) python-scalar leaves (the round counter) crashed save with
+``'int' object has no attribute 'dtype'``; (2) load ran blobs through
+``arr.astype(tag)`` + ``jnp.asarray``, silently downcasting int64/float64
+under x64-disabled jax -- not a bit-exact round-trip; (3) load validated
+only the LEAF COUNT, so a same-arity but differently-shaped or
+differently-structured template restored garbage instead of erroring.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import (latest_step, load_checkpoint, restore,
+                                 save_checkpoint)
+from repro.configs import get_smoke_config
+from repro.launch.steps import init_ef_tree
+from repro.models import transformer as tf
+
+
+def _bits(x) -> np.ndarray:
+    """Bit-pattern view for exact comparison (bf16 has no numpy dtype)."""
+    a = np.asarray(jax.device_get(x))
+    return a.view(np.uint16) if a.dtype == jnp.bfloat16 else a
+
+
+def _state(n_fl: int = 4):
+    cfg = get_smoke_config("qwen2-100m")
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    # non-zero EF so a zeros-template can't fake a pass
+    ef = jax.tree_util.tree_map(lambda x: x + 0.125,
+                                init_ef_tree(params, n_fl))
+    return {"params": params, "ef": ef, "round": 7}
+
+
+def _like(state):
+    return jax.tree_util.tree_map(
+        lambda x: 0 if isinstance(x, int) else jnp.zeros_like(x), state)
+
+
+class TestRoundTrip:
+    def test_qwen2_100m_state_bit_exact(self, tmp_path):
+        """The real thing: bf16 params + stacked (M, .) f32 EF + python-int
+        round counter, back bit-for-bit with dtypes intact."""
+        state = _state()
+        save_checkpoint(str(tmp_path), 7, state)
+        back, step = restore(str(tmp_path), _like(state))
+        assert step == 7
+        assert back["round"] == 7 and type(back["round"]) is int
+        la = jax.tree_util.tree_leaves_with_path(state)
+        lb = jax.tree_util.tree_leaves_with_path(back)
+        assert len(la) == len(lb)
+        for (pa, a), (pb, b) in zip(la, lb):
+            assert pa == pb
+            if hasattr(a, "dtype"):
+                assert a.dtype == b.dtype, (pa, a.dtype, b.dtype)
+            np.testing.assert_array_equal(_bits(a), _bits(b), err_msg=str(pa))
+
+    def test_ef_dtype_variants_round_trip(self, tmp_path):
+        cfg = get_smoke_config("qwen2-100m")
+        params = tf.init_params(cfg, jax.random.PRNGKey(1))
+        for i, dt in enumerate([jnp.float32, jnp.bfloat16]):
+            ef = jax.tree_util.tree_map(
+                lambda x: (x + 0.5).astype(dt), init_ef_tree(params, 2, dt))
+            save_checkpoint(str(tmp_path), i, ef)
+            back = load_checkpoint(
+                str(tmp_path), i,
+                jax.tree_util.tree_map(jnp.zeros_like, ef))
+            for a, b in zip(jax.tree_util.tree_leaves(ef),
+                            jax.tree_util.tree_leaves(back)):
+                assert a.dtype == b.dtype
+                np.testing.assert_array_equal(_bits(a), _bits(b))
+
+    def test_latest_step_and_restore_empty(self, tmp_path):
+        assert latest_step(str(tmp_path / "nowhere")) is None
+        tree, step = restore(str(tmp_path), {"w": jnp.zeros(3)})
+        assert tree is None and step is None
+        save_checkpoint(str(tmp_path), 3, {"w": jnp.ones(3)})
+        save_checkpoint(str(tmp_path), 11, {"w": jnp.full(3, 2.0)})
+        assert latest_step(str(tmp_path)) == 11
+        tree, step = restore(str(tmp_path), {"w": jnp.zeros(3)})
+        assert step == 11 and float(tree["w"][0]) == 2.0
+
+
+class TestWrongTemplateRejected:
+    def test_leaf_count_mismatch(self, tmp_path):
+        state = _state()
+        save_checkpoint(str(tmp_path), 0, state)
+        bad = {"params": _like(state)["params"]}
+        with pytest.raises(AssertionError, match="leaves"):
+            load_checkpoint(str(tmp_path), 0, bad)
+
+    def test_treedef_mismatch_same_arity(self, tmp_path):
+        """Same leaf count, different structure: the seed code restored
+        leaves positionally into the wrong tree; now a hard error."""
+        state = _state()
+        save_checkpoint(str(tmp_path), 0, state)
+        flat = jax.tree_util.tree_leaves(_like(state))
+        bad = {f"k{i:04d}": leaf for i, leaf in enumerate(flat)}
+        with pytest.raises(ValueError, match="treedef"):
+            load_checkpoint(str(tmp_path), 0, bad)
+
+    def test_shape_mismatch(self, tmp_path):
+        save_checkpoint(str(tmp_path), 0, {"w": jnp.ones((4, 4))})
+        with pytest.raises(ValueError, match="shape"):
+            load_checkpoint(str(tmp_path), 0, {"w": jnp.zeros((4, 5))})
+
+    def test_stacked_ef_shape_drift_detected(self, tmp_path):
+        """A checkpoint written with M=4 EF rows must not restore into an
+        M=8 run (the exact seed->stacked-layout migration hazard)."""
+        state = _state(n_fl=4)
+        save_checkpoint(str(tmp_path), 0, state)
+        other = _like(_state(n_fl=8))
+        with pytest.raises(ValueError, match="shape"):
+            load_checkpoint(str(tmp_path), 0, other)
+
+
+class TestScalarAndExoticLeaves:
+    def test_python_scalars_save_and_restore(self, tmp_path):
+        """Seed crash: _leaf_to_numpy assumed every leaf has .dtype."""
+        tree = {"round": 3, "lr": 0.125, "w": jnp.arange(4.0)}
+        save_checkpoint(str(tmp_path), 0, tree)
+        back = load_checkpoint(str(tmp_path), 0,
+                               {"round": 0, "lr": 0.0, "w": jnp.zeros(4)})
+        assert back["round"] == 3 and type(back["round"]) is int
+        assert back["lr"] == 0.125 and type(back["lr"]) is float
+        np.testing.assert_array_equal(np.asarray(back["w"]),
+                                      np.arange(4.0, dtype=np.float32))
+
+    def test_int64_blob_is_not_silently_truncated(self, tmp_path):
+        """Under x64-disabled jax an int64 blob cannot become a jnp array
+        without downcasting; load must hand back the exact numpy array
+        (or a python scalar for scalar templates), never truncated bits."""
+        big = np.array([2**40 + 17, -(2**35)], dtype=np.int64)
+        save_checkpoint(str(tmp_path), 0, {"steps": big, "count": 2**40})
+        back = load_checkpoint(str(tmp_path), 0,
+                               {"steps": np.zeros(2, np.int64), "count": 0})
+        np.testing.assert_array_equal(np.asarray(back["steps"]), big)
+        assert back["steps"].dtype == np.int64
+        assert back["count"] == 2**40
+
+    def test_corrupt_blob_dtype_rejected(self, tmp_path):
+        path = save_checkpoint(str(tmp_path), 0, {"w": jnp.ones(3)})
+        # overwrite the blob with a different dtype than the manifest tag
+        np.save(os.path.join(path, "arr_00000.npy"),
+                np.ones(3, dtype=np.float64))
+        with pytest.raises(ValueError, match="manifest"):
+            load_checkpoint(str(tmp_path), 0, {"w": jnp.zeros(3)})

@@ -14,9 +14,11 @@ from __future__ import annotations
 import jaxlib
 import pytest
 
-from repro.launch.compat import ensure_fast_cpu_runtime
+from repro.launch.compat import (ensure_fast_cpu_runtime,
+                                 force_host_device_count)
 
 FLAG = "--xla_cpu_use_thunk_runtime=false"
+COUNT8 = "--xla_force_host_platform_device_count=8"
 
 
 @pytest.fixture
@@ -96,3 +98,57 @@ class TestIdempotence:
         flags = os.environ["XLA_FLAGS"].split()
         assert "--xla_force_host_platform_device_count=8" in flags
         assert FLAG in flags
+
+
+class TestForceHostDeviceCountComposition:
+    """The two env mutators must compose in EITHER order.
+
+    examples/train_100m_lgc.py used to do
+    ``os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_...")``,
+    which is a silent no-op whenever XLA_FLAGS is inherited (a CI lane or a
+    parent process that already ran ``ensure_fast_cpu_runtime``) -- the
+    8-device mesh build then fails with "Number of devices 1 must be >= 8".
+    These pins make that regression impossible to reintroduce quietly.
+    """
+
+    def test_force_after_ensure_keeps_runtime_flag(self, clean_env):
+        # the exact bit-rot scenario: runtime flag already in the env
+        clean_env.setattr(jaxlib, "__version__", "0.4.37")
+        import os
+        assert ensure_fast_cpu_runtime() is True
+        force_host_device_count(8)
+        flags = os.environ["XLA_FLAGS"].split()
+        assert COUNT8 in flags and FLAG in flags
+        assert flags.count(FLAG) == 1
+
+    def test_ensure_after_force_keeps_device_count(self, clean_env):
+        clean_env.setattr(jaxlib, "__version__", "0.4.37")
+        import os
+        force_host_device_count(8)
+        assert ensure_fast_cpu_runtime() is True
+        flags = os.environ["XLA_FLAGS"].split()
+        assert COUNT8 in flags and FLAG in flags
+        assert flags.count(COUNT8) == 1
+
+    def test_inherited_count_is_replaced_not_shadowed(self, clean_env):
+        """XLA honours the LAST occurrence of the flag; stale inherited
+        values must be dropped, not merely appended after."""
+        clean_env.setattr(jaxlib, "__version__", "0.4.37")
+        import os
+        clean_env.setenv(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=2")
+        force_host_device_count(8)
+        flags = os.environ["XLA_FLAGS"].split()
+        assert COUNT8 in flags
+        assert "--xla_force_host_platform_device_count=2" not in flags
+
+    def test_idempotent(self, clean_env):
+        clean_env.setattr(jaxlib, "__version__", "0.4.37")
+        import os
+        force_host_device_count(8)
+        first = os.environ["XLA_FLAGS"]
+        force_host_device_count(8)
+        # flag ORDER may change (count is re-appended last, which XLA
+        # honours); the set of flags must not
+        assert set(os.environ["XLA_FLAGS"].split()) == set(first.split())
+        assert os.environ["XLA_FLAGS"].split().count(COUNT8) == 1

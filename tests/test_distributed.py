@@ -149,12 +149,13 @@ class TestTrainSteps:
             pspecs = rules.param_specs(cfg, params, mesh)
             params = rules.place(params, pspecs, mesh)
             from jax.sharding import PartitionSpec as P
+            especs = rules.ef_specs(pspecs, "data")
             step = jax.jit(make_lgc_train_step(cfg, mesh, lgc, bspecs),
                            in_shardings=compat.shardings(
-                               mesh, (pspecs, pspecs, bspecs)),
+                               mesh, (pspecs, especs, bspecs)),
                            out_shardings=compat.shardings(
-                               mesh, (pspecs, pspecs, P())))
-            ef = rules.place(init_ef_tree(params), pspecs, mesh)
+                               mesh, (pspecs, especs, P())))
+            ef = rules.place(init_ef_tree(params, 8), especs, mesh)
             losses = []
             for i in range(15):
                 x, y = pipe.next_batch()
