@@ -22,6 +22,19 @@ Six gates, each naming the metric and file that tripped:
   This is the DDPG-vs-fixed accuracy table: a controller change that
   quietly costs accuracy under ``gilbert_flaky`` or ``diurnal_cycle``
   trips here, not in a throughput number;
+* **Pareto gate** -- mostly self-relative within BENCH_scenarios.json: on
+  every scenario carrying a ``hetero_ddpg`` row (the per-device action
+  space with pipelined decisions; bench_scenarios.PARETO_SCENARIOS), the
+  heterogeneous fleet must dominate-or-match its fixed reference (the
+  ``fixed_*`` fields embedded in the row -- a dedicated h=4 run at the
+  same PARETO_ROUNDS budget) on at least one of ``energy_j`` / ``time_s``
+  while giving up at most 2 points of ``final_accuracy`` -- the paper's
+  claim that learned per-device control buys resource savings, not just a
+  different operating point.  Additionally its pipelined
+  ``wall_ratio_vs_fixed`` (controller wall clock over that reference's)
+  must not regress past the *committed
+  baseline's shared-DDPG* ratio: the pipelined per-device fleet may not
+  cost more controller overhead than the blocking shared fleet did;
 * **100M gate** -- the (aggregate, sparsity) frontier rows of
   BENCH_100m.json vs the committed BENCH_100m_baseline.json:
   ``wire_bytes_per_round_per_device`` must not grow past
@@ -229,6 +242,93 @@ def check_scenarios(baseline: dict, current: dict, tolerance: float
     return failures
 
 
+def check_pareto(baseline: dict | None, current: dict, tolerance: float,
+                 acc_budget: float = 0.02) -> list[str]:
+    """Pareto gate over the ``hetero_ddpg`` rows of BENCH_scenarios.json
+    (see module docstring).  ``baseline`` supplies the committed shared-DDPG
+    ``wall_ratio_vs_fixed`` ceiling; pass None to skip the wall check."""
+    by_scen: dict[str, dict[str, dict]] = {}
+    for r in current["rows"]:
+        by_scen.setdefault(r["scenario"], {})[r["controller"]] = r
+    base_rows = {(r["scenario"], r["controller"]): r
+                 for r in (baseline["rows"] if baseline else [])}
+    failures, gated = [], False
+    for scen, rows in sorted(by_scen.items()):
+        het = rows.get("hetero_ddpg")
+        if het is None:
+            continue
+        gated = True
+        # the fixed reference runs at the Pareto budget (PARETO_ROUNDS, not
+        # the sweep's --rounds) and is embedded in the hetero row itself as
+        # fixed_* fields -- the sweep's own fixed row is NOT comparable
+        if "fixed_final_accuracy" not in het:
+            failures.append(f"BENCH_scenarios.json pareto scenario={scen}: "
+                            f"hetero_ddpg row without embedded fixed_* "
+                            f"reference fields")
+            _note("BENCH_scenarios.json pareto", scen, "no fixed_* fields",
+                  "embedded fixed reference", "present", False)
+            continue
+        fixed = {"final_accuracy": het["fixed_final_accuracy"],
+                 "energy_j": het["fixed_energy_j"],
+                 "time_s": het["fixed_time_s"]}
+        wins = [ax for ax in ("energy_j", "time_s") if het[ax] <= fixed[ax]]
+        acc_floor = fixed["final_accuracy"] - acc_budget
+        ok_acc = het["final_accuracy"] >= acc_floor
+        ok = bool(wins) and ok_acc
+        verdict = "ok" if ok else "FAILED"
+        print(f"  {verdict:>9}: scenario={scen}  energy "
+              f"{het['energy_j']:.2f} vs fixed {fixed['energy_j']:.2f}, "
+              f"time {het['time_s']:.2f}s vs {fixed['time_s']:.2f}s "
+              f"(wins: {wins or 'none'}), accuracy "
+              f"{het['final_accuracy']:.4f} (floor {acc_floor:.4f})")
+        _note("BENCH_scenarios.json pareto", scen,
+              f"energy {het['energy_j']:.2f} / time {het['time_s']:.2f} / "
+              f"acc {het['final_accuracy']:.4f}",
+              f"fixed {fixed['energy_j']:.2f} / {fixed['time_s']:.2f} / "
+              f"{fixed['final_accuracy']:.4f}",
+              f"<= fixed on energy_j or time_s, acc >= fixed - {acc_budget}",
+              ok)
+        if not ok:
+            failures.append(
+                f"BENCH_scenarios.json pareto scenario={scen}: hetero_ddpg "
+                f"beats fixed on {wins or 'neither axis'} with accuracy "
+                f"{het['final_accuracy']:.4f} vs floor {acc_floor:.4f}")
+        # pipelined controller overhead vs the committed shared-DDPG ratio
+        b = base_rows.get((scen, "ddpg"))
+        b_fix = base_rows.get((scen, "fixed"))
+        ratio = het.get("wall_ratio_vs_fixed")
+        if b is None or ratio is None:
+            print(f"  wall-ratio check skipped for {scen}: no baseline "
+                  f"ddpg row or no wall_ratio_vs_fixed")
+            continue
+        base_ratio = b.get("wall_ratio_vs_fixed")
+        if base_ratio is None and b_fix is not None and b_fix["wall_s"] > 0:
+            base_ratio = b["wall_s"] / b_fix["wall_s"]
+        if base_ratio is None:
+            print(f"  wall-ratio check skipped for {scen}: baseline has "
+                  f"no derivable ddpg/fixed wall ratio")
+            continue
+        ceil = base_ratio * (1.0 + tolerance)
+        ok_wall = ratio <= ceil
+        verdict = "ok" if ok_wall else "REGRESSED"
+        print(f"  {verdict:>9}: scenario={scen}  pipelined "
+              f"wall_ratio_vs_fixed {ratio:.3f} vs committed shared-DDPG "
+              f"{base_ratio:.3f} (ceiling {ceil:.3f})")
+        _note("BENCH_scenarios.json pareto wall_ratio_vs_fixed", scen,
+              f"{ratio:.3f}", f"{base_ratio:.3f}", f"<= {ceil:.3f}", ok_wall)
+        if not ok_wall:
+            failures.append(
+                f"BENCH_scenarios.json pareto wall_ratio scenario={scen}: "
+                f"{ratio:.3f} > ceiling {ceil:.3f} (baseline shared-DDPG "
+                f"{base_ratio:.3f})")
+    if not gated:
+        failures.append("BENCH_scenarios.json pareto: no hetero_ddpg rows "
+                        "found (bench_scenarios.PARETO_SCENARIOS not run?)")
+        _note("BENCH_scenarios.json pareto", "hetero_ddpg rows", "none",
+              "PARETO_SCENARIOS", "present", False)
+    return failures
+
+
 def check_100m(baseline: dict, current: dict, tolerance: float
                ) -> list[str]:
     """100M gate: (aggregate, sparsity)-keyed frontier rows of
@@ -391,6 +491,11 @@ def main() -> int:
               f"({args.scenarios_baseline} vs {args.scenarios_current})")
         failures += check_scenarios(scen_baseline, scen_current,
                                     args.tolerance)
+    if scen_current is not None:
+        print(f"pareto gate ({args.scenarios_current}, acc budget 0.02, "
+              f"wall tolerance {args.tolerance:.0%})")
+        failures += check_pareto(scen_baseline, scen_current,
+                                 args.tolerance)
     hm_baseline, hm_current = _load_pair(
         args.hundredm_baseline, args.hundredm_current, "100M")
     if hm_baseline is not None:

@@ -25,10 +25,12 @@ from .channels import (DEFAULT_CHANNELS, ChannelSpec, DeviceProfile,
 from .fl import (ControllerFleet, FLConfig, FLTask, FixedController, History,
                  LGCSimulator, RoundDecision, run_baseline)
 from .scenario import (SCENARIOS, DropoutSpec, GaussMarkovSpec,
-                       GilbertElliottSpec, Scenario, StragglerSpec,
-                       get_scenario)
+                       GilbertElliottSpec, HeteroFleetSpec, Scenario,
+                       StragglerSpec, get_scenario)
 from .controller import (DDPGConfig, DDPGController, FleetDDPG,
-                         make_ddpg_controllers, make_fleet_ddpg)
+                         decode_actions, make_ddpg_controllers,
+                         make_fleet_ddpg, obs_dim)
+from .audit import audit_simulator, recompute_spend
 from .population import (COHORT_SAMPLERS, Population, make_population,
                          make_population_task, run_population, sample_cohort)
 from .server import (AGGREGATORS, AggregatorSpec, ServerState, get_aggregator,
@@ -46,9 +48,10 @@ __all__ = [
     "ControllerFleet", "FLConfig", "FLTask", "FixedController", "History",
     "LGCSimulator", "RoundDecision", "run_baseline",
     "SCENARIOS", "DropoutSpec", "GaussMarkovSpec", "GilbertElliottSpec",
-    "Scenario", "StragglerSpec", "get_scenario",
-    "DDPGConfig", "DDPGController", "FleetDDPG",
-    "make_ddpg_controllers", "make_fleet_ddpg",
+    "HeteroFleetSpec", "Scenario", "StragglerSpec", "get_scenario",
+    "DDPGConfig", "DDPGController", "FleetDDPG", "decode_actions",
+    "make_ddpg_controllers", "make_fleet_ddpg", "obs_dim",
+    "audit_simulator", "recompute_spend",
     "ProblemConstants", "corollary1_rate", "theorem1_bound",
     "COHORT_SAMPLERS", "Population", "make_population",
     "make_population_task", "run_population", "sample_cohort",

@@ -1,0 +1,124 @@
+"""Decision-log cost auditing: recompute History spend from first principles.
+
+The engines account energy / money / wall-time / bytes incrementally at every
+sync (``LGCSimulator._sync_device``, ``BatchedEngine.run``).  Because every
+cost depends only on *committed controller decisions* and *counter-based
+channel randomness* -- never on gradient values -- the whole spend ledger can
+be recomputed after the fact from
+
+    (FLConfig, mode, model size d, device profiles, decision_log)
+
+by replaying the scenario chains and pricing each logged decision's sync
+round.  :func:`recompute_spend` does exactly that, mirroring the loop
+engine's host accounting (f32 channel math, integer byte counts, f64
+accumulation in sync order) so the totals are *identical*, not just close.
+
+This closes the accounting gap the benchmarks could never catch: an engine
+that silently drifts its cost bookkeeping (wrong sync round, dropped
+channel mask, comp cost with the wrong h) now fails the cross-engine
+cost-conservation property test
+(tests/test_hetero_control.py::TestCostConservation) instead of shipping a
+wrong Pareto frontier.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .channels import comm_cost, comp_cost, stack_specs
+from .compressor import wire_bytes
+from .scenario import (TAG_CHANNEL, dropout_mask, get_scenario, init_carry,
+                       sample_from_carry, step_carry, stream_key)
+
+
+def sync_round_of(cfg, t_commit: int, h: int) -> int:
+    """The round at which a decision committed at ``t_commit`` syncs.
+
+    ``shared``: the device's own window is h rounds; ``per_device``: every
+    window is max_gap rounds and h only masks compute steps inside it."""
+    per_device = getattr(cfg, "action_space", "shared") == "per_device"
+    return t_commit + (cfg.max_gap if per_device else h) - 1
+
+
+def recompute_spend(cfg, mode: str, d: int, decision_log: Sequence[tuple],
+                    m_devices: int, profiles=None) -> list[dict]:
+    """Replay ``decision_log`` -> per-device spend dicts.
+
+    ``decision_log`` rows are the simulator's ``(t_commit, m, h, ks)``
+    tuples.  Decisions whose window runs past ``cfg.rounds`` never synced
+    and cost nothing (exactly like the engines).  Returns a list of M dicts
+    with keys energy_j / money / time_s / mb, f64-accumulated in the same
+    per-device sync order the engines use."""
+    scn = get_scenario(cfg.scenario)
+    if profiles is None:
+        profiles = scn.device_profiles(m_devices)
+    profiles = list(profiles)
+    base = jax.random.PRNGKey(cfg.seed + 1)
+    n_ch = len(cfg.channels)
+    consts = stack_specs(cfg.channels)
+    dev_ids = jnp.arange(m_devices, dtype=jnp.int32)
+    carry = jax.vmap(lambda i: init_carry(scn, base, i, n_ch))(dev_ids)
+    # identical vmapped chain advance to LGCSimulator._scen_step_all, so the
+    # realized ChannelSample at each sync round is the engines' bit-for-bit
+    step_all = jax.jit(
+        lambda c, t: jax.vmap(
+            lambda ci, i: step_carry(scn, base, ci, t, i,
+                                     jnp.bool_(True)))(c, dev_ids))
+
+    syncs: dict[tuple[int, int], tuple[int, list[int]]] = {}
+    for (t_commit, m, h, ks) in decision_log:
+        t_sync = sync_round_of(cfg, t_commit, h)
+        if t_sync < cfg.rounds:
+            syncs[(t_sync, m)] = (int(h), list(ks))
+    spend = [dict(energy_j=0.0, money=0.0, time_s=0.0, mb=0.0)
+             for _ in range(m_devices)]
+    if not syncs:
+        return spend
+    last = max(t for (t, _m) in syncs)
+
+    for t in range(last + 1):
+        if not scn.is_static:
+            carry = step_all(carry, jnp.int32(t))
+        for m in range(m_devices):
+            if (t, m) not in syncs:
+                continue
+            h, ks = syncs[(t, m)]
+            k_ch = stream_key(base, TAG_CHANNEL, t, m)
+            carry_m = jax.tree_util.tree_map(lambda a: a[m], carry)
+            ch = sample_from_carry(scn, consts, carry_m, k_ch)
+            if scn.has_dropout:
+                drop = dropout_mask(scn, base, t, dev_ids[m:m + 1])[0]
+                ch = ch._replace(up=ch.up & ~drop)
+            # byte accounting per mode, the loop engine's code verbatim
+            if mode == "fedavg":
+                any_up = bool(np.asarray(ch.up).any())
+                bw = np.asarray(ch.bandwidth_mb_s) * np.asarray(ch.up)
+                best = int(np.argmax(bw))
+                nbytes = [0] * n_ch
+                nbytes[best] = d * cfg.value_bytes if any_up else 0
+            else:
+                if mode == "topk":
+                    ks = [sum(ks)] + [0] * (len(ks) - 1)
+                vb = 1 if mode == "lgc_q8" else cfg.value_bytes
+                received = [bool(u) for u in np.asarray(ch.up)][:len(ks)]
+                received += [True] * (len(ks) - len(received))
+                nbytes = wire_bytes(ks, vb, cfg.index_bytes)
+                nbytes = [b if r else 0 for b, r in zip(nbytes, received)]
+            cost = comm_cost(ch, nbytes)
+            ccomp = comp_cost(profiles[m], h)
+            s = spend[m]
+            s["energy_j"] += float(cost["energy_j"]) + ccomp["energy_j"]
+            s["money"] += float(cost["money"]) + ccomp["money"]
+            s["time_s"] += float(cost["time_s"]) + ccomp["time_s"]
+            s["mb"] += float(sum(nbytes)) / 1e6
+    return spend
+
+
+def audit_simulator(sim) -> tuple[list[dict], list[dict]]:
+    """(recomputed, live) spend for a finished :class:`LGCSimulator` run."""
+    recomputed = recompute_spend(sim.cfg, sim.mode, sim.d, sim.decision_log,
+                                 sim.m_devices, profiles=sim.profiles)
+    return recomputed, sim.spend

@@ -130,6 +130,12 @@ class DeviceProfile:
     name: str = "generic-phone"
     comp_j_per_step: float = 0.75   # J per local SGD step (model-size scaled)
     comp_time_per_step_s: float = 0.05
+    # state of charge in [0, 1]; static per run (a device trait, like the
+    # compute multiplier).  The heterogeneous controller observes it and
+    # decode_actions clamps h_m to 1 + floor(battery * (h_max - 1)), so a
+    # zero-battery device never computes more than the one mandatory step
+    # (tests/test_controller_actions.py).
+    battery: float = 1.0
 
 
 def comp_cost(profile: DeviceProfile, h_steps: int) -> dict[str, float]:

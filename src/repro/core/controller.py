@@ -81,11 +81,43 @@ def _norm_states(states: np.ndarray) -> np.ndarray:
     return np.log1p(np.maximum(states, 0)).astype(np.float32)
 
 
+# observation layouts per action space (docs/ARCHITECTURE.md §13): the
+# "shared" space observes the four Eq. (11) resource spends; "per_device"
+# appends the device's own profile -- battery, compute-time multiplier --
+# and the realized per-channel state from the scenario carry, so policies
+# can condition on fleet heterogeneity.  BATTERY_COL indexes battery in the
+# RAW (un-normalized) per_device state vector; decode_actions reads it for
+# the energy clamp.
+SPEND_DIM = 4                 # energy, money, time, mb (Eq. 11)
+PROFILE_DIM = 2               # battery, compute-time multiplier
+BATTERY_COL = SPEND_DIM
+
+
+def obs_dim(n_channels: int, action_space: str) -> int:
+    """Width of the observation vector the simulator builds
+    (:meth:`repro.core.fl.LGCSimulator._controller_states`) for each
+    action space; ``DDPGConfig.state_dim`` must equal it."""
+    if action_space == "shared":
+        return SPEND_DIM
+    if action_space == "per_device":
+        return SPEND_DIM + PROFILE_DIM + n_channels
+    raise ValueError(f"unknown action_space {action_space!r}; "
+                     f"expected 'shared' or 'per_device'")
+
+
 def decode_actions(a: np.ndarray, h_max: int, k_total_max: int,
-                   n_channels: int) -> tuple[np.ndarray, np.ndarray]:
+                   n_channels: int, battery: np.ndarray | None = None
+                   ) -> tuple[np.ndarray, np.ndarray]:
     """Decode raw tanh actions ``(..., 1+C)`` into ``h (...,)`` local-step
     counts and ``ks (..., C)`` per-channel budgets with ``1 <= ks`` and
-    ``sum(ks) <= max(n_channels, k_total_max)``.
+    ``sum(ks) <= max(n_channels, k_total_max)`` -- the per-device budget
+    clamp holds row by row, not just in aggregate.
+
+    ``battery`` (same leading shape as ``a``, values in [0, 1]) applies the
+    per-device energy clamp of the heterogeneous action space:
+    ``h <= 1 + floor(battery * (h_max - 1))``, so a zero-battery device is
+    pinned to the one mandatory local step no matter what its policy says.
+    ``battery=None`` (the shared action space) leaves ``h`` untouched.
 
     Elementwise numpy, so decoding one action and decoding a stacked batch
     of them are bit-identical -- the fleet and the per-device agents share
@@ -95,6 +127,10 @@ def decode_actions(a: np.ndarray, h_max: int, k_total_max: int,
     squeeze = a.ndim == 1
     a = np.atleast_2d(a)
     h = np.rint((a[:, 0] + 1) / 2 * (h_max - 1)).astype(np.int64) + 1
+    if battery is not None:
+        soc = np.clip(np.atleast_1d(np.asarray(battery, np.float64)), 0.0, 1.0)
+        h_cap = 1 + np.floor(soc * (h_max - 1)).astype(np.int64)
+        h = np.minimum(h, h_cap)
     # channel allocations: softmax-ish positive split of the budget
     w = np.exp(2.0 * a[:, 1:])
     w = w / w.sum(-1, keepdims=True)
@@ -245,7 +281,12 @@ def _scatter_rows(dst, src, idx):
 
 @dataclasses.dataclass
 class DDPGConfig:
-    state_dim: int = 4           # energy, money, time, mb  (per Eq. 11)
+    # observation width: must equal obs_dim(n_channels, action_space) --
+    # 4 (energy, money, time, mb per Eq. 11) for "shared", 4 + 2 + C
+    # (+ battery, compute multiplier, per-channel state) for "per_device".
+    # Validated below: the observation builder and the replay buffer take
+    # their widths from here, so a silent mismatch would corrupt training.
+    state_dim: int = 4
     n_channels: int = 3
     h_max: int = 8               # cap on local steps (paper's H bound)
     k_total_max: int = 0         # max coords/round; set from model size
@@ -258,6 +299,31 @@ class DDPGConfig:
     noise_decay: float = 0.999
     lr: float = 1e-3
     seed: int = 0
+    # Optimistic compute prior: added to the raw h action (column 0) before
+    # decode, then clipped back to [-1, 1].  With h_prior=1.0 an untrained
+    # policy starts at the battery-capped maximum compute -- the fixed
+    # baseline's operating point -- and has to *learn* to save resources
+    # downward (the spend-normalized reward points that way), instead of
+    # exploring from half compute and paying the accuracy before earning
+    # the savings.  Decode-side only: the replay buffer stores the raw
+    # actor action, so the critic still sees the policy's own space.
+    # 0.0 keeps the pre-ARCH-§13 behavior bit-exactly.
+    h_prior: float = 0.0
+    # "shared" -- the pre-§13 space: every device decides (h, k_1..k_C)
+    # from the 4-wide spend state.  "per_device" -- the heterogeneous
+    # space: profile-augmented observations, battery-clamped h_m, uniform
+    # max_gap sync windows with a masked-step scan (ARCHITECTURE.md §13).
+    action_space: str = "shared"
+
+    def __post_init__(self):
+        expected = obs_dim(self.n_channels, self.action_space)  # validates
+        if self.state_dim != expected:
+            raise ValueError(
+                f"DDPGConfig.state_dim={self.state_dim} does not match the "
+                f"observation vector the simulator builds for "
+                f"action_space={self.action_space!r} with "
+                f"{self.n_channels} channels: expected width {expected} "
+                f"(see repro.core.controller.obs_dim)")
 
 
 class ReplayBuffer:
@@ -418,11 +484,40 @@ class FleetDDPG:
         return (np.ones(self.m, bool) if mask is None
                 else np.asarray(mask, bool))
 
+    def _check_width(self, states: np.ndarray) -> np.ndarray:
+        """Observation width must match cfg.state_dim (the replay buffer and
+        MLPs are built from it); raise with both shapes instead of silently
+        training on a misaligned state vector."""
+        states = np.asarray(states, np.float32)
+        if states.shape[-1] != self.cfg.state_dim:
+            raise ValueError(
+                f"observation width {states.shape[-1]} (states shape "
+                f"{states.shape}) does not match DDPGConfig.state_dim="
+                f"{self.cfg.state_dim} for action_space="
+                f"{self.cfg.action_space!r}")
+        return states
+
+    def _battery(self, states: np.ndarray) -> np.ndarray | None:
+        """Battery column of the RAW per_device state (None when shared)."""
+        if self.cfg.action_space != "per_device":
+            return None
+        return states[:, BATTERY_COL]
+
+    def _with_prior(self, a: np.ndarray) -> np.ndarray:
+        """Apply the optimistic compute prior (cfg.h_prior) to the raw h
+        action before decode; identity at the 0.0 default."""
+        if not self.cfg.h_prior:
+            return a
+        a = a.copy()
+        a[:, 0] = np.clip(a[:, 0] + self.cfg.h_prior, -1.0, 1.0)
+        return a
+
     # -- batched controller protocol ------------------------------------
     def act(self, states: np.ndarray, mask: np.ndarray | None = None
             ) -> tuple[np.ndarray, np.ndarray]:
         """(h (M,), ks (M, C)) for the masked devices, one jitted call."""
         mask = self._mask(mask)
+        states = self._check_width(states)
         s = _norm_states(states)
         a = np.asarray(_act_fleet(
             self.actor, jnp.asarray(s), self._bases,
@@ -434,12 +529,15 @@ class FleetDDPG:
         self._n_act[mask] += 1
         self._sigma[mask] *= self.cfg.noise_decay
         cfg = self.cfg
-        return decode_actions(a, cfg.h_max, cfg.k_total_max, cfg.n_channels)
+        return decode_actions(self._with_prior(a), cfg.h_max,
+                              cfg.k_total_max, cfg.n_channels,
+                              battery=self._battery(states))
 
     def observe(self, loss_drops: np.ndarray, new_states: np.ndarray,
                 mask: np.ndarray | None = None):
         """Reward + replay insert + (buffer-warm) train for all masked
         devices at once."""
+        new_states = self._check_width(new_states)
         mask = self._mask(mask) & self._has_last
         if not mask.any():
             return
@@ -486,32 +584,43 @@ class FleetDDPG:
         """Greedy (noise-free) decisions for every device; advances no
         random stream -- the public read-only view of the learned policies.
         A single (S,) probe state is broadcast to all M devices."""
-        s = _norm_states(np.atleast_2d(states))
-        if s.shape[0] == 1:
-            s = np.broadcast_to(s, (self.m, s.shape[1]))
+        states = self._check_width(np.atleast_2d(states))
+        if states.shape[0] == 1:
+            states = np.broadcast_to(states, (self.m, states.shape[1]))
+        s = _norm_states(states)
         a = np.asarray(_policy_fleet(self.actor, jnp.asarray(s)))
         cfg = self.cfg
-        return decode_actions(a, cfg.h_max, cfg.k_total_max, cfg.n_channels)
+        return decode_actions(self._with_prior(a), cfg.h_max,
+                              cfg.k_total_max, cfg.n_channels,
+                              battery=self._battery(states))
 
 
 def make_ddpg_controllers(m_devices: int, model_dim: int,
                           n_channels: int = 3, h_max: int = 8,
-                          sparsity: float = 0.05, seed: int = 0
+                          sparsity: float = 0.05, seed: int = 0,
+                          action_space: str = "shared"
                           ) -> list[DDPGController]:
     """One agent per device (paper: per-device policies); the reference the
     vectorized :func:`make_fleet_ddpg` bank is bit-identical to."""
     return [DDPGController(DDPGConfig(
+        state_dim=obs_dim(n_channels, action_space),
         n_channels=n_channels, h_max=h_max,
         k_total_max=max(n_channels, int(model_dim * sparsity)),
-        seed=seed + 17 * m)) for m in range(m_devices)]
+        seed=seed + 17 * m, action_space=action_space))
+        for m in range(m_devices)]
 
 
 def make_fleet_ddpg(m_devices: int, model_dim: int,
                     n_channels: int = 3, h_max: int = 8,
-                    sparsity: float = 0.05, seed: int = 0) -> FleetDDPG:
+                    sparsity: float = 0.05, seed: int = 0,
+                    action_space: str = "shared") -> FleetDDPG:
     """The fleet equivalent of :func:`make_ddpg_controllers` (same per-device
-    seeds, same decisions, one jitted call per sync boundary)."""
+    seeds, same decisions, one jitted call per sync boundary).
+    ``action_space="per_device"`` sizes the observation width for the
+    profile-augmented heterogeneous space (pair with
+    ``FLConfig(action_space="per_device")``)."""
     return FleetDDPG(m_devices, DDPGConfig(
+        state_dim=obs_dim(n_channels, action_space),
         n_channels=n_channels, h_max=h_max,
         k_total_max=max(n_channels, int(model_dim * sparsity)),
-        seed=seed))
+        seed=seed, action_space=action_space))

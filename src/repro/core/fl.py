@@ -135,6 +135,25 @@ class FLConfig:
     deadline_factor: float = 1.25      # semi_sync: deadline = factor * median
     outer_lr: float = 0.7              # diloco outer step size
     outer_momentum: float = 0.9        # diloco outer Nesterov momentum
+    # controller action space (docs/ARCHITECTURE.md §13):
+    # * "shared"     -- the pre-existing semantics: each device's h_m sets its
+    #   own next sync round (windows break at every device's boundary).
+    #   Bitwise-identical to the code before the action space existed.
+    # * "per_device" -- uniform sync windows of max_gap rounds (every device
+    #   syncs at every boundary); h_m in [1, max_gap] is the number of local
+    #   SGD steps the device actually computes (the first h_m rounds of the
+    #   window; the rest it idles, saving compute energy).  The controller
+    #   observation grows to spend + device profile (battery, compute
+    #   multiplier) + per-channel state (repro.core.controller.obs_dim), and
+    #   decode_actions clamps h_m by the device's battery.
+    action_space: str = "shared"
+    # pipeline controller decisions with the compute: at each sync boundary
+    # the engine COMMITS the decision staged at the previous boundary and
+    # stages a fresh one -- so the batched engine can dispatch the next
+    # window before doing reward evaluation / fleet training, taking the
+    # controller off the critical path.  Decisions then act on one-window-old
+    # observations (window t+1 is decided from window t-1's state).
+    pipeline_decisions: bool = False
 
 
 @dataclasses.dataclass
@@ -264,6 +283,11 @@ class LGCSimulator:
                 f"unknown layer_policy {cfg.layer_policy!r}; expected "
                 f"'global' or one of {sorted(LAYER_POLICIES)}")
         self.m_devices = len(task.device_data)
+        if cfg.action_space not in ("shared", "per_device"):
+            raise ValueError(
+                f"unknown action_space {cfg.action_space!r}; expected "
+                f"'shared' or 'per_device'")
+        self.per_device = cfg.action_space == "per_device"
         if isinstance(controllers, (list, tuple)):
             self.fleet = ControllerFleet(controllers)
             self.controllers = list(controllers)
@@ -294,7 +318,9 @@ class LGCSimulator:
         self.ef = [EFState(jnp.zeros((self.d,), jnp.float32))
                    for _ in range(self.m_devices)]
         self.next_sync = [0] * self.m_devices        # t at which device syncs
+        self.win_start = [0] * self.m_devices        # t the decision committed
         self.decisions = [None] * self.m_devices
+        self.staged = [None] * self.m_devices        # pipeline_decisions only
         self.decision_log: list[tuple] = []          # (t, m, h, ks) committed
         self.spend = [dict(energy_j=0.0, money=0.0, time_s=0.0, mb=0.0)
                       for _ in range(self.m_devices)]
@@ -321,6 +347,17 @@ class LGCSimulator:
                 lambda c, i: step_carry(scn, base, c, t, i,
                                         jnp.bool_(True)))(carry,
                                                           self._dev_ids))
+
+        # per_device observations: static profile features (battery, compute
+        # multiplier relative to the generic profile) + a host snapshot of
+        # the per-channel chain state, refreshed by the engines at sync
+        # boundaries from the (M, C) scenario carry they just advanced
+        base_prof = DeviceProfile()
+        self._profile_feats = np.array(
+            [[p.battery, p.comp_time_per_step_s / base_prof.comp_time_per_step_s]
+             for p in profiles], np.float32)
+        self._chan_state = np.ones((self.m_devices, n_ch), np.float32)
+        self._update_chan_state(self.scen_carry)
 
     # -- jitted pieces ------------------------------------------------------
     def _make_sgd_step(self):
@@ -359,18 +396,25 @@ class LGCSimulator:
             return jax.lax.map(lambda mm: one(params, xe, ye, t, mm), ms)
         return batched
 
-    def _reward_losses(self, ms: Sequence[int], t: int) -> list[float]:
+    def _reward_losses(self, ms: Sequence[int], t: int,
+                       params=None) -> list[float]:
         """Per-device keyed-subset eval losses for devices ``ms`` at round
         ``t``, in one jitted call (rows padded to a power of two so the
-        fleet's varying sync-set sizes compile only a few programs)."""
+        fleet's varying sync-set sizes compile only a few programs).
+
+        ``params`` overrides the live global model: the pipelined batched
+        engine defers this eval until after it has dispatched (and rebound
+        params for) the next window, passing the boundary-time handle --
+        valid because params is never donated."""
         if self._eval_xy is None:
             xb, yb = self.task.eval_data
             self._eval_xy = (jnp.asarray(xb), jnp.asarray(yb))
         ms = list(ms)
         pad = (1 << max(0, (len(ms) - 1)).bit_length()) - len(ms)
         rows = jnp.asarray(ms + [ms[-1]] * pad, jnp.int32)
-        losses = self._reward_eval(self.params, *self._eval_xy,
-                                   jnp.int32(t), rows)
+        losses = self._reward_eval(
+            self.params if params is None else params, *self._eval_xy,
+            jnp.int32(t), rows)
         return [float(l) for l in np.asarray(losses)[: len(ms)]]
 
     def _make_server_apply(self):
@@ -463,27 +507,95 @@ class LGCSimulator:
         return float(loss), float(acc)
 
     def _controller_states(self) -> np.ndarray:
-        """(M, 4) resource spends, the controller state of every device."""
-        return np.array([[s["energy_j"], s["money"], s["time_s"], s["mb"]]
-                         for s in self.spend], np.float32)
+        """Controller state of every device: (M, 4) resource spends, plus --
+        under ``action_space="per_device"`` -- the device profile (battery,
+        compute multiplier) and the per-channel chain-state snapshot, (M,
+        4 + 2 + C) total (repro.core.controller.obs_dim)."""
+        spend = np.array([[s["energy_j"], s["money"], s["time_s"], s["mb"]]
+                          for s in self.spend], np.float32)
+        if not self.per_device:
+            return spend
+        return np.concatenate([spend, self._profile_feats, self._chan_state],
+                              axis=1)
 
-    def _decide_devices(self, ms: Sequence[int], t: int):
-        """One fleet act for all devices in ``ms``; commit their decisions."""
-        ms = list(ms)
-        if not ms:
+    def _update_chan_state(self, carry):
+        """Snapshot the scenario carry to the host observation features:
+        effective relative bandwidth exp(bw_log) * good per channel.  A
+        *snapshot* (not a lazy read) because the batched engines donate the
+        carry buffers to the next window program."""
+        if not self.per_device:
             return
+        bw = np.asarray(carry.bw_log, np.float32)
+        good = np.asarray(carry.good)
+        self._chan_state = (np.exp(bw) * good).astype(np.float32)
+
+    def _fleet_decide(self, ms: Sequence[int], t: int) -> dict:
+        """One fleet act for the devices in ``ms`` -> {m: RoundDecision}."""
         mask = np.zeros(self.m_devices, bool)
         mask[ms] = True
         h_arr, ks_arr = self.fleet.act(self._controller_states(), mask)
         n_ch = len(self.cfg.channels)
+        out = {}
         for m in ms:
             h = int(np.clip(int(h_arr[m]), 1, self.cfg.max_gap))
             # one layer per channel: pad/trim the controller's budgets so both
             # engines see the same (and the cost model's shapes line up)
             ks = ([int(k) for k in ks_arr[m]] + [0] * n_ch)[:n_ch]
-            self.decisions[m] = RoundDecision(h, ks)
-            self.next_sync[m] = t + h
-            self.decision_log.append((t, m, h, tuple(ks)))
+            out[m] = RoundDecision(h, ks)
+        return out
+
+    def _commit_decision(self, m: int, t: int, dec: RoundDecision):
+        """Make ``dec`` the live decision for device ``m``'s next window.
+
+        ``shared``: h_m is the window length (the device's own next sync).
+        ``per_device``: every device syncs each max_gap rounds; h_m is how
+        many of those rounds it actually computes (the engines mask the
+        rest), so heterogeneous h never fragments the windows."""
+        self.decisions[m] = dec
+        self.win_start[m] = t
+        self.next_sync[m] = t + (self.cfg.max_gap if self.per_device
+                                 else dec.h)
+        self.decision_log.append((t, m, dec.h, tuple(dec.ks)))
+
+    def _commit_staged(self, ms: Sequence[int], t: int):
+        """Pipelined commit: adopt the decisions staged at each device's
+        previous boundary.  At t=0 nothing is staged yet -- the first act
+        serves both the first window and the first staged decision (window 1
+        is decided from the initial state, i.e. window -1's observations)."""
+        ms = list(ms)
+        missing = [m for m in ms if self.staged[m] is None]
+        if missing:
+            fresh = self._fleet_decide(missing, t)
+            for m in missing:
+                self.staged[m] = fresh[m]
+        for m in ms:
+            self._commit_decision(m, t, self.staged[m])
+
+    def _stage_decisions(self, ms: Sequence[int], t: int):
+        """Pipelined stage: act now, commit at the next boundary.  The
+        batched engine calls this AFTER dispatching the next window, so the
+        fleet's jitted act/train programs overlap device compute."""
+        ms = list(ms)
+        if not ms:
+            return
+        fresh = self._fleet_decide(ms, t)
+        for m in ms:
+            self.staged[m] = fresh[m]
+
+    def _decide_devices(self, ms: Sequence[int], t: int):
+        """One controller boundary for the devices in ``ms``: commit their
+        decisions for the window starting at ``t`` (and, when pipelined,
+        stage the decisions for the window after it)."""
+        ms = list(ms)
+        if not ms:
+            return
+        if self.cfg.pipeline_decisions:
+            self._commit_staged(ms, t)
+            self._stage_decisions(ms, t)
+            return
+        fresh = self._fleet_decide(ms, t)
+        for m in ms:
+            self._commit_decision(m, t, fresh[m])
 
     # -- main loop ----------------------------------------------------------
     def run(self) -> History:
@@ -509,9 +621,15 @@ class LGCSimulator:
             eta = self._eta(t)
             updates, sync_ms, walls, t32s = [], [], [], []
             for m in range(self.m_devices):
-                batch = self._sample_batch(m, t)
-                self.w_hat[m] = self._sgd_step(self.w_hat[m], batch,
-                                               jnp.float32(eta))
+                # per_device: the device computes only the first h_m rounds
+                # of its max_gap window and idles the rest (the batched
+                # engine's masked-step scan leaves w_hat bitwise untouched
+                # on idle rounds; skipping the step here matches that)
+                if (not self.per_device
+                        or t - self.win_start[m] < self.decisions[m].h):
+                    batch = self._sample_batch(m, t)
+                    self.w_hat[m] = self._sgd_step(self.w_hat[m], batch,
+                                                   jnp.float32(eta))
                 if t + 1 >= self.next_sync[m]:
                     g, total, t32 = self._sync_device(m, t)
                     updates.append(g)
@@ -536,6 +654,7 @@ class LGCSimulator:
                     # broadcast: device adopts the global model
                     self.w_hat[m] = self.params
                     self.w_anchor[m] = flatten_tree(self.params)
+                self._update_chan_state(self.scen_carry)
                 self._observe_devices(sync_ms, t)
                 self._decide_devices(sync_ms, t + 1)
             if t % cfg.eval_every == 0 or t == cfg.rounds - 1:
@@ -655,15 +774,16 @@ class LGCSimulator:
                          + np.float32(ccomp["time_s"]))
         return g, total, t32
 
-    def _observe_devices(self, ms: Sequence[int], t: int):
+    def _observe_devices(self, ms: Sequence[int], t: int, params=None):
         """Reward Eq. (14)-(16): utility = (loss drop) / (resource spend),
-        delivered to every synced reward-seeking device in one fleet call."""
+        delivered to every synced reward-seeking device in one fleet call.
+        ``params`` as in :meth:`_reward_losses`."""
         need = [m for m in ms if self.fleet.needs_reward[m]]
         if not need:
             return
         loss_drops = np.zeros(self.m_devices, np.float64)
         mask = np.zeros(self.m_devices, bool)
-        for m, loss in zip(need, self._reward_losses(need, t)):
+        for m, loss in zip(need, self._reward_losses(need, t, params)):
             if self.prev_loss[m] is not None:
                 loss_drops[m] = self.prev_loss[m] - loss
                 mask[m] = True

@@ -153,6 +153,23 @@ def make_device_phase(*, cfg, loss_fn, base, mode, backend, scenario,
                 lambda p, gi: jnp.where(valid, p - eta * gi, p), w, grads)
         return jax.vmap(dev)(w_hat, keys, n_dev, data)
 
+    def local_round_pd(w_hat, t, eta, valid_m, data, n_dev, dev_ids):
+        """local_round with a PER-DEVICE (M_blk,) valid mask: the masked-step
+        scan of action_space="per_device", where device m computes only the
+        first h_m rounds of its window.  Same arithmetic as local_round with
+        only the select predicate vmapped, so a device whose mask stays True
+        takes bitwise the same steps as under the shared path."""
+        keys = jax.vmap(lambda i: stream_key(base, TAG_BATCH, t, i))(
+            dev_ids)
+
+        def dev(w, key, n, rows, v):
+            idx = jax.random.randint(key, (bsz,), 0, n)
+            batch = jax.tree_util.tree_map(lambda a: a[idx], rows)
+            grads = jax.grad(loss_fn)(w, batch)
+            return jax.tree_util.tree_map(
+                lambda p, gi: jnp.where(v, p - eta * gi, p), w, grads)
+        return jax.vmap(dev)(w_hat, keys, n_dev, data, valid_m)
+
     policy = getattr(cfg, "layer_policy", "global")
 
     def compress(ef, delta, ks_mat, recv, k_cap, slices):
@@ -197,16 +214,29 @@ def make_device_phase(*, cfg, loss_fn, base, mode, backend, scenario,
         return g, u - g
 
     def device_phase(w_hat, anchor, ef, scen_carry, data, n_dev, dev_ids,
-                     ts, etas, valid, sync_mask, ks_mat, *, k_cap):
+                     ts, etas, valid, sync_mask, ks_mat, *, k_cap,
+                     h_arr=None, t0=None):
         """ts/etas/valid: (L,) round indices, step sizes, padding mask
         (L is padded to a power of two so few scan programs compile);
         ks_mat: (M_blk, C); scen_carry: (M_blk, ·) scenario chain state,
         advanced one step per valid scanned round (padded steps leave it
-        bitwise untouched)."""
+        bitwise untouched).
+
+        ``h_arr``/``t0`` (action_space="per_device" only): (M_blk,) local
+        step counts and the replicated window start round.  Device m's SGD
+        step is additionally masked to the first h_m valid rounds of the
+        window (the masked-step scan) -- one program regardless of how
+        heterogeneous the h_m are.  Scenario chains and channel/sync math
+        are untouched: the environment evolves whether or not the device
+        chooses to compute."""
         def body(state, sc):
             w, carry = state
             t, eta, v = sc
-            w = local_round(w, t, eta, v, data, n_dev, dev_ids)
+            if h_arr is None:
+                w = local_round(w, t, eta, v, data, n_dev, dev_ids)
+            else:
+                vm = jnp.logical_and(v, (t - t0) < h_arr)
+                w = local_round_pd(w, t, eta, vm, data, n_dev, dev_ids)
             carry = jax.vmap(
                 lambda c, i: step_carry(scn, base, c, t, i, v))(
                 carry, dev_ids)
@@ -343,12 +373,11 @@ class BatchedEngine:
             mode=sim.mode, backend=sim.backend, scenario=sim.scenario,
             d=self.d, n_ch=self.n_ch)
 
-        def window(params, w_hat, anchor, ef, scen_carry, data,
-                   n_dev, dev_ids, ts, etas, valid, sync_mask, ks_mat, *,
-                   k_cap):
-            w_hat, scen_carry, g_masked, ef, costs = device_phase(
-                w_hat, anchor, ef, scen_carry, data, n_dev, dev_ids,
-                ts, etas, valid, sync_mask, ks_mat, k_cap=k_cap)
+        def _serve_mean(params, w_hat, anchor, ef, scen_carry, sync_mask,
+                        g_masked, costs):
+            """Server mean + broadcast, shared by the shared/per_device
+            window signatures below (tracing inlines this, so the shared
+            path's program is unchanged)."""
             if axis_name is None:
                 g_sum = jnp.sum(g_masked, axis=0)
             elif server_reduce == "gather":
@@ -372,9 +401,30 @@ class BatchedEngine:
             anchor = jnp.where(sync_mask[:, None], new_flat[None], anchor)
             return new_params, w_hat, anchor, ef, scen_carry, costs
 
+        def window(params, w_hat, anchor, ef, scen_carry, data,
+                   n_dev, dev_ids, ts, etas, valid, sync_mask, ks_mat, *,
+                   k_cap):
+            w_hat, scen_carry, g_masked, ef, costs = device_phase(
+                w_hat, anchor, ef, scen_carry, data, n_dev, dev_ids,
+                ts, etas, valid, sync_mask, ks_mat, k_cap=k_cap)
+            return _serve_mean(params, w_hat, anchor, ef, scen_carry,
+                               sync_mask, g_masked, costs)
+
+        def window_pd(params, w_hat, anchor, ef, scen_carry, data,
+                      n_dev, dev_ids, ts, etas, valid, sync_mask, ks_mat,
+                      h_arr, t0, *, k_cap):
+            """per_device window: + (M_blk,) local-step counts and the
+            replicated window start for the masked-step scan."""
+            w_hat, scen_carry, g_masked, ef, costs = device_phase(
+                w_hat, anchor, ef, scen_carry, data, n_dev, dev_ids,
+                ts, etas, valid, sync_mask, ks_mat, k_cap=k_cap,
+                h_arr=h_arr, t0=t0)
+            return _serve_mean(params, w_hat, anchor, ef, scen_carry,
+                               sync_mask, g_masked, costs)
+
         agg = sim.agg.name
         if agg == "mean":
-            return window
+            return window_pd if sim.per_device else window
 
         # -- non-mean aggregators: same device phase, a ServerState carry, --
         # -- and the repro.core.server update in place of the plain mean   --
@@ -382,16 +432,8 @@ class BatchedEngine:
         alpha, cap = float(cfg.staleness_alpha), int(cfg.staleness_cap)
         out_lr, out_mu = float(cfg.outer_lr), float(cfg.outer_momentum)
 
-        def window_ext(params, w_hat, anchor, ef, scen_carry, server_state,
-                       data, n_dev, dev_ids, ts, etas, valid, sync_mask,
-                       ks_mat, comp_time, deadline, *, k_cap):
-            """Extended window: ``comp_time`` is the (M_blk,) f32 per-device
-            compute seconds for this window's local steps, ``deadline`` the
-            replicated f32 semi-sync deadline; ``server_state`` is carried
-            replicated (every shard computes the identical new state)."""
-            w_hat, scen_carry, g_masked, ef, costs = device_phase(
-                w_hat, anchor, ef, scen_carry, data, n_dev, dev_ids,
-                ts, etas, valid, sync_mask, ks_mat, k_cap=k_cap)
+        def _serve_ext(params, w_hat, anchor, ef, scen_carry, server_state,
+                       sync_mask, comp_time, deadline, g_masked, costs):
             T = costs[:, 2] + comp_time           # realised window seconds
             if agg == "semi_sync":
                 # the fraction of each late device's update the server will
@@ -448,7 +490,34 @@ class BatchedEngine:
             return (new_params, w_hat, anchor, ef, scen_carry, server_state,
                     costs)
 
-        return window_ext
+        def window_ext(params, w_hat, anchor, ef, scen_carry, server_state,
+                       data, n_dev, dev_ids, ts, etas, valid, sync_mask,
+                       ks_mat, comp_time, deadline, *, k_cap):
+            """Extended window: ``comp_time`` is the (M_blk,) f32 per-device
+            compute seconds for this window's local steps, ``deadline`` the
+            replicated f32 semi-sync deadline; ``server_state`` is carried
+            replicated (every shard computes the identical new state)."""
+            w_hat, scen_carry, g_masked, ef, costs = device_phase(
+                w_hat, anchor, ef, scen_carry, data, n_dev, dev_ids,
+                ts, etas, valid, sync_mask, ks_mat, k_cap=k_cap)
+            return _serve_ext(params, w_hat, anchor, ef, scen_carry,
+                              server_state, sync_mask, comp_time, deadline,
+                              g_masked, costs)
+
+        def window_ext_pd(params, w_hat, anchor, ef, scen_carry,
+                          server_state, data, n_dev, dev_ids, ts, etas,
+                          valid, sync_mask, ks_mat, comp_time, deadline,
+                          h_arr, t0, *, k_cap):
+            """window_ext + the per_device masked-step scan inputs."""
+            w_hat, scen_carry, g_masked, ef, costs = device_phase(
+                w_hat, anchor, ef, scen_carry, data, n_dev, dev_ids,
+                ts, etas, valid, sync_mask, ks_mat, k_cap=k_cap,
+                h_arr=h_arr, t0=t0)
+            return _serve_ext(params, w_hat, anchor, ef, scen_carry,
+                              server_state, sync_mask, comp_time, deadline,
+                              g_masked, costs)
+
+        return window_ext_pd if sim.per_device else window_ext
 
     # -- host loop: chain windows, controllers decide at boundaries ---------
     def run(self) -> History:
@@ -456,6 +525,14 @@ class BatchedEngine:
         hist = History()
         sim._decide_devices(range(self.m), 0)
         t = 0
+        # cfg.pipeline_decisions: the boundary's reward eval + fresh act are
+        # DEFERRED until after the next window has been dispatched, so the
+        # controller's jitted programs overlap device compute instead of
+        # sitting on the critical path.  The committed decisions were staged
+        # one boundary earlier, so the next window's (h, ks) inputs never
+        # wait on the fleet.  (sync set, reward round, params handle) --
+        # params is never donated, so the boundary-time handle stays valid.
+        deferred = None
         while t < cfg.rounds:
             # window boundaries are SYNC points only: global params (and
             # spend) are constant between syncs, so eval points that fall
@@ -471,6 +548,8 @@ class BatchedEngine:
                 jnp.float32)
             valid = jnp.asarray([True] * length + [False] * pad)
             params_before = sim.params
+            extras = ((self._h_arr(), jnp.int32(t))
+                      if sim.per_device else ())
             if sim.agg.name == "mean":
                 deadline = None
                 (sim.params, self.w_hat, self.anchor, self.ef,
@@ -478,7 +557,7 @@ class BatchedEngine:
                     sim.params, self.w_hat, self.anchor, self.ef,
                     self.scen_carry, self.data, self.n_dev,
                     self.dev_ids, ts, etas, valid, self._sync_mask(te),
-                    self._ks_mat(), k_cap=self._k_cap())
+                    self._ks_mat(), *extras, k_cap=self._k_cap())
             else:
                 # host-side f64 deadline from committed decisions + nominal
                 # channels (identical across engines for the same sync set)
@@ -490,7 +569,12 @@ class BatchedEngine:
                     self.scen_carry, self.server_state, self.data,
                     self.n_dev, self.dev_ids, ts, etas, valid,
                     self._sync_mask(te), self._ks_mat(), self._comp_time(),
-                    jnp.float32(deadline), k_cap=self._k_cap())
+                    jnp.float32(deadline), *extras, k_cap=self._k_cap())
+            if deferred is not None:
+                ms_d, t_d, params_d = deferred
+                deferred = None
+                sim._observe_devices(ms_d, t_d, params=params_d)
+                sim._stage_decisions(ms_d, t_d + 1)
             rec = [r for r in range(t, te)
                    if r % cfg.eval_every == 0 or r == cfg.rounds - 1]
             if rec and rec[-1] == te - 1:
@@ -522,11 +606,27 @@ class BatchedEngine:
                     sim.server_wall_s += min(deadline, max(t_wins))
                 else:
                     sim.server_wall_s += max(t_wins)
-                sim._observe_devices(sync_ms, te - 1)
-                sim._decide_devices(sync_ms, te)
+                sim._update_chan_state(self.scen_carry)
+                if cfg.pipeline_decisions:
+                    # commit now (the next window's inputs); evaluate the
+                    # reward and stage the boundary-after-next's decisions
+                    # once that window is in flight.  Same fleet-call order
+                    # as the loop engine (observe, then act) -- only the
+                    # host-side bookkeeping moves.
+                    sim._commit_staged(sync_ms, te)
+                    deferred = (sync_ms, te - 1, sim.params)
+                else:
+                    sim._observe_devices(sync_ms, te - 1)
+                    sim._decide_devices(sync_ms, te)
             if last_rec:
                 sim._record(hist, te - 1)
             t = te
+        if deferred is not None:
+            # final boundary: nothing left to overlap with -- flush so the
+            # fleet sees the same observe/act sequence as the loop engine
+            ms_d, t_d, params_d = deferred
+            sim._observe_devices(ms_d, t_d, params=params_d)
+            sim._stage_decisions(ms_d, t_d + 1)
         return hist
 
     def _sync_mask(self, te: int) -> Array:
@@ -558,6 +658,11 @@ class BatchedEngine:
         cap = min(self.d, 1 << (k_max - 1).bit_length())
         self._k_cap_hi = max(cap, getattr(self, "_k_cap_hi", 0))
         return self._k_cap_hi
+
+    def _h_arr(self) -> Array:
+        """(M,) committed local-step counts as a traced array (per_device
+        windows only) -- heterogeneous h_m never recompiles the window."""
+        return jnp.asarray([dec.h for dec in self.sim.decisions], jnp.int32)
 
     def _ks_mat(self) -> Array:
         """Per-device layer budgets as a traced (M, C) array (topk folds all
@@ -616,17 +721,22 @@ class ShardedEngine(BatchedEngine):
             #       pytree -- the single spec applies leaf-wise as a
             #       prefix), n_dev, dev_ids, ts, etas, valid, sync_mask,
             #       ks_mat
-            self._in_specs = (rep, shard, shard, shard, shard, shard,
-                              shard, shard, rep, rep, rep, shard, shard)
+            in_specs = [rep, shard, shard, shard, shard, shard,
+                        shard, shard, rep, rep, rep, shard, shard]
             self._out_specs = (rep, shard, shard, shard, shard, shard)
         else:
             # extended window: + the replicated ServerState carry after
             # scen_carry, and the sharded (M,) comp_time + replicated
             # deadline scalar at the tail (see _make_window's window_ext)
-            self._in_specs = (rep, shard, shard, shard, shard, rep, shard,
-                              shard, shard, rep, rep, rep, shard, shard,
-                              shard, rep)
+            in_specs = [rep, shard, shard, shard, shard, rep, shard,
+                        shard, shard, rep, rep, rep, shard, shard,
+                        shard, rep]
             self._out_specs = (rep, shard, shard, shard, shard, rep, shard)
+        if sim.per_device:
+            # the masked-step scan's (M,) h_arr shards with the device
+            # axis; the t0 window-start scalar is replicated
+            in_specs += [shard, rep]
+        self._in_specs = tuple(in_specs)
         # pre-place the stacked state and data so every window call reuses
         # the resident shards instead of re-scattering from host
         place = lambda tree: jax.device_put(

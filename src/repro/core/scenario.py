@@ -136,6 +136,29 @@ class StragglerSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class HeteroFleetSpec:
+    """Skewed per-device traits, cycled by *global* device id.
+
+    Device ``i`` gets ``batteries[i % len]`` state of charge and
+    ``compute_mults[i % len]`` as a multiplier on both compute energy and
+    compute time -- the heterogeneity the per-device controller observes
+    (battery + compute multiplier land in the profile-augmented state
+    vector, docs/ARCHITECTURE.md §13).  Cycling by global id keeps the
+    assignment shard-layout independent, like :meth:`Scenario.drop_probs`.
+
+    The default ladder is healthy-majority / weak-tail: three full-battery
+    tiers of increasing compute cost plus two battery-poor stragglers whose
+    decode clamp (h <= 1 + floor(soc * (h_max-1))) bites at h_max=4.  A
+    deeper poverty tier (e.g. battery 0.1, pinned at h=1) starves that
+    device's data shard outright under plain-mean aggregation and turns the
+    scenario into an aggregator-weighting benchmark instead of a
+    controller benchmark.
+    """
+    batteries: Sequence[float] = (1.0, 1.0, 1.0, 0.7, 0.67)
+    compute_mults: Sequence[float] = (1.0, 1.0, 1.5, 2.5, 4.0)
+
+
+@dataclasses.dataclass(frozen=True)
 class Scenario:
     """Bundle of channel dynamics, data heterogeneity and device dynamics.
 
@@ -151,6 +174,7 @@ class Scenario:
     gilbert_elliott: GilbertElliottSpec | None = None
     dropout: DropoutSpec | None = None
     straggler: StragglerSpec | None = None
+    hetero: HeteroFleetSpec | None = None
     partition: str = "iid"          # "iid" | "noniid" | "dirichlet" | "quantity"
     alpha: float = 0.5              # Dirichlet concentration (data skew)
 
@@ -171,8 +195,19 @@ class Scenario:
         Keyed by global device id so population cohorts (which materialize
         profiles only for the M sampled devices, never all N) agree with a
         full-participation run over the same ids -- the same global-id rule
-        as :meth:`drop_probs` and the carry streams."""
+        as :meth:`drop_probs` and the carry streams.  The ``hetero`` skew
+        (battery + compute multiplier) applies first; a straggler slowdown
+        multiplies on top."""
         base = DeviceProfile()
+        h = self.hetero
+        if h is not None:
+            battery = float(h.batteries[i % len(h.batteries)])
+            mult = float(h.compute_mults[i % len(h.compute_mults)])
+            base = DeviceProfile(
+                name=f"{base.name}-hetero{i % len(h.batteries)}",
+                comp_j_per_step=base.comp_j_per_step * mult,
+                comp_time_per_step_s=base.comp_time_per_step_s * mult,
+                battery=battery)
         s = self.straggler
         if (s is None or s.slow_every <= 0 or s.slowdown == 1.0
                 or i % s.slow_every != 0):
@@ -180,7 +215,8 @@ class Scenario:
         return DeviceProfile(
             name=f"{base.name}-straggler",
             comp_j_per_step=base.comp_j_per_step * s.slowdown,
-            comp_time_per_step_s=base.comp_time_per_step_s * s.slowdown)
+            comp_time_per_step_s=base.comp_time_per_step_s * s.slowdown,
+            battery=base.battery)
 
     def device_profiles(self, m: int) -> list[DeviceProfile]:
         """Per-device compute profiles with the straggler slowdown applied."""
@@ -315,13 +351,32 @@ SCENARIOS: dict[str, Scenario] = {
     # statistical heterogeneity only: Dirichlet(0.3) label skew, static net
     "dirichlet0.3": Scenario(
         name="dirichlet0.3", partition="dirichlet", alpha=0.3),
-    # the kitchen sink: correlated channels + skewed data + flaky stragglers
+    # heterogeneous fleet: skewed battery / compute-speed traits on top of
+    # correlated channels -- the per-device controller's home turf (a
+    # uniform policy over-spends the weak devices' batteries).  Data stays
+    # IID on purpose: hardware skew is this scenario's axis; pairing label
+    # skew with pinned-down devices measures the plain-mean aggregator's
+    # missing-class drag, not the controller (mobile_noniid owns data skew)
+    "hetero_fleet": Scenario(
+        name="hetero_fleet",
+        gauss_markov=GaussMarkovSpec(rho=0.9, sigma=0.5),
+        gilbert_elliott=GilbertElliottSpec(p_gb=0.1, p_bg=0.4),
+        hetero=HeteroFleetSpec()),
+    # the kitchen sink: correlated channels + skewed data + flaky stragglers.
+    # The battery ladder is phase-locked to StragglerSpec(slow_every=4): the
+    # i % 4 == 0 straggler tier is also the battery-poor one, so a
+    # per-device controller can cap exactly the devices whose steps cost 3x.
+    # compute_mults stay 1.0 -- battery only enters the per-device
+    # observation and the decode clamp, so the fixed / shared-DDPG cost
+    # model (and their committed bench baselines) are untouched.
     "mobile_noniid": Scenario(
         name="mobile_noniid",
         gauss_markov=GaussMarkovSpec(rho=0.9, sigma=0.5),
         gilbert_elliott=GilbertElliottSpec(p_gb=0.1, p_bg=0.4),
         dropout=DropoutSpec(base_prob=0.02, flaky_every=4, flaky_prob=0.2),
         straggler=StragglerSpec(slow_every=4, slowdown=3.0),
+        hetero=HeteroFleetSpec(batteries=(0.55, 1.0, 1.0, 1.0),
+                               compute_mults=(1.0, 1.0, 1.0, 1.0)),
         partition="dirichlet", alpha=0.3),
 }
 

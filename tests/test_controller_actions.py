@@ -1,0 +1,172 @@
+"""Property suite for the controller action space (ARCHITECTURE.md §13).
+
+``decode_actions`` is the single point where raw policy outputs become
+simulator decisions, for the per-agent controllers, the fleet, and both
+action spaces -- so its invariants are load-bearing for every engine:
+
+* per-device budget clamp: ``1 <= ks_{m,c}`` and ``sum_c ks_{m,c} <=
+  max(C, k_total_max)`` row by row, for ANY raw action tensor;
+* local-step bounds: ``1 <= h_m <= h_max``; with a battery the energy clamp
+  ``h_m <= 1 + floor(battery_m * (h_max - 1))`` (zero battery pins h_m = 1);
+* determinism and shape stability: decoding a stacked (M, 1+C) batch row by
+  row equals decoding it at once, for M in {1, 8, 64}.
+
+Plus the satellite fix: ``DDPGConfig.state_dim`` is validated against the
+observation width the simulator actually builds
+(:func:`repro.core.controller.obs_dim`), and :class:`FleetDDPG` refuses
+misaligned state vectors with both shapes in the error.
+"""
+import numpy as np
+import pytest
+
+from repro.core import DDPGConfig, FLConfig, FleetDDPG, LGCSimulator
+from repro.core.controller import (BATTERY_COL, PROFILE_DIM, SPEND_DIM,
+                                   decode_actions, make_fleet_ddpg, obs_dim)
+from repro.core.fl import FixedController
+
+from _hypothesis_compat import given, settings, st  # hypothesis or fallback
+
+
+def _unit(i: int) -> float:
+    """Map an int draw to [-1, 1] (the tanh action range)."""
+    return max(-1.0, min(1.0, i / 1000.0))
+
+
+@st.composite
+def action_batches(draw):
+    """(a (M, 1+C), h_max, k_total_max, battery (M,) | None)."""
+    m = draw(st.integers(min_value=1, max_value=16))
+    n_ch = draw(st.integers(min_value=1, max_value=5))
+    h_max = draw(st.integers(min_value=1, max_value=12))
+    k_total = draw(st.integers(min_value=0, max_value=4000))
+    flat = draw(st.lists(st.integers(min_value=-1500, max_value=1500),
+                         min_size=m * (1 + n_ch), max_size=m * (1 + n_ch)))
+    a = np.array([_unit(v) for v in flat], np.float64).reshape(m, 1 + n_ch)
+    with_batt = draw(st.booleans())
+    if with_batt:
+        bl = draw(st.lists(st.integers(min_value=0, max_value=1000),
+                           min_size=m, max_size=m))
+        battery = np.array(bl, np.float64) / 1000.0
+    else:
+        battery = None
+    return a, h_max, k_total, battery
+
+
+class TestDecodeActionProperties:
+    @given(action_batches())
+    @settings(max_examples=60, deadline=None)
+    def test_budget_and_step_clamps(self, case):
+        a, h_max, k_total, battery = case
+        n_ch = a.shape[1] - 1
+        h, ks = decode_actions(a, h_max, k_total, n_ch, battery=battery)
+        assert h.shape == (a.shape[0],) and ks.shape == (a.shape[0], n_ch)
+        assert np.all(h >= 1) and np.all(h <= h_max)
+        # per-device budget clamp, row by row
+        assert np.all(ks >= 1)
+        assert np.all(ks.sum(-1) <= max(n_ch, k_total))
+        if battery is not None:
+            cap = 1 + np.floor(np.clip(battery, 0, 1) * (h_max - 1))
+            assert np.all(h <= cap)
+
+    @given(action_batches())
+    @settings(max_examples=30, deadline=None)
+    def test_deterministic(self, case):
+        a, h_max, k_total, battery = case
+        n_ch = a.shape[1] - 1
+        h1, ks1 = decode_actions(a, h_max, k_total, n_ch, battery=battery)
+        h2, ks2 = decode_actions(a, h_max, k_total, n_ch, battery=battery)
+        np.testing.assert_array_equal(h1, h2)
+        np.testing.assert_array_equal(ks1, ks2)
+
+    def test_zero_battery_pins_floor(self):
+        """A drained device never computes more than the mandatory step,
+        even when its policy saturates the action."""
+        rng = np.random.default_rng(0)
+        for _ in range(20):
+            a = rng.uniform(-1, 1, size=(8, 4))
+            a[:, 0] = 1.0                      # policy wants h = h_max
+            h, _ = decode_actions(a, 8, 500, 3, battery=np.zeros(8))
+            assert np.all(h == 1)
+
+    @pytest.mark.parametrize("m", [1, 8, 64])
+    def test_shape_stable_batch_equals_rowwise(self, m):
+        """Decoding a stacked batch == decoding each row alone (the fleet
+        and the per-agent list must make identical decisions)."""
+        rng = np.random.default_rng(m)
+        a = rng.uniform(-1, 1, size=(m, 4))
+        battery = rng.uniform(0, 1, size=m)
+        h, ks = decode_actions(a, 8, 320, 3, battery=battery)
+        assert h.shape == (m,) and ks.shape == (m, 3)
+        for i in range(m):
+            hi, ksi = decode_actions(a[i], 8, 320, 3, battery=battery[i:i + 1])
+            assert hi == h[i]
+            np.testing.assert_array_equal(ksi, ks[i])
+
+
+class TestObservationWidth:
+    def test_obs_dim_layout(self):
+        assert obs_dim(3, "shared") == SPEND_DIM == 4
+        assert obs_dim(3, "per_device") == SPEND_DIM + PROFILE_DIM + 3 == 9
+        assert BATTERY_COL == SPEND_DIM
+        with pytest.raises(ValueError, match="action_space"):
+            obs_dim(3, "layered")
+
+    def test_state_dim_validated_at_construction(self):
+        """The satellite fix: a state_dim that disagrees with the simulator's
+        observation builder raises with BOTH widths, instead of silently
+        training a misaligned replay buffer."""
+        with pytest.raises(ValueError, match=r"state_dim=4.*width 9"):
+            DDPGConfig(state_dim=4, action_space="per_device")
+        with pytest.raises(ValueError, match=r"state_dim=9.*width 4"):
+            DDPGConfig(state_dim=9, action_space="shared")
+        # and the matching widths construct fine
+        DDPGConfig(state_dim=4, action_space="shared")
+        DDPGConfig(state_dim=9, action_space="per_device")
+
+    def test_fleet_rejects_misaligned_states(self):
+        fleet = make_fleet_ddpg(2, 1000, action_space="per_device")
+        assert fleet.cfg.state_dim == 9
+        with pytest.raises(ValueError, match=r"width 4.*state_dim=9"):
+            fleet.act(np.zeros((2, 4), np.float32))
+        with pytest.raises(ValueError, match=r"width 4.*state_dim=9"):
+            fleet.observe(np.zeros(2), np.zeros((2, 4), np.float32))
+
+    def test_simulator_rejects_unknown_action_space(self):
+        from repro.models.paper_models import make_mnist_task
+        task = make_mnist_task("lr", m_devices=2, n_train=200)
+        cfg = FLConfig(rounds=2, action_space="layered")
+        with pytest.raises(ValueError, match="action_space"):
+            LGCSimulator(task, cfg, [FixedController(2, [4, 2, 2])] * 2)
+
+    def test_mismatched_fleet_and_config_raise(self):
+        """A shared-width fleet driving a per_device simulator trips the
+        width check at the first act (and vice versa)."""
+        from repro.models.paper_models import make_mnist_task
+        task = make_mnist_task("lr", m_devices=2, n_train=200)
+        fleet = make_fleet_ddpg(2, 1000, action_space="shared")
+        cfg = FLConfig(rounds=4, action_space="per_device")
+        sim = LGCSimulator(task, cfg, fleet)
+        with pytest.raises(ValueError, match="state_dim"):
+            sim.run()
+
+
+class TestPerDeviceFleetActs:
+    def test_battery_clamps_fleet_decisions(self):
+        """A per_device fleet given zero-battery raw states never picks
+        h > 1, whatever its (random-init) policies say."""
+        fleet = make_fleet_ddpg(4, 2000, action_space="per_device")
+        states = np.ones((4, 9), np.float32)
+        states[:, BATTERY_COL] = 0.0
+        h, ks = fleet.act(states)
+        assert np.all(h == 1)
+        assert ks.shape == (4, 3)
+        full = np.ones((4, 9), np.float32)
+        h_full, _ = fleet.act(full)
+        assert np.all(h_full >= 1) and np.all(h_full <= fleet.cfg.h_max)
+
+    def test_allocation_uses_battery(self):
+        fleet = make_fleet_ddpg(3, 2000, action_space="per_device")
+        probe = np.ones(9, np.float32)
+        probe[BATTERY_COL] = 0.0
+        h, _ = fleet.allocation(probe)
+        assert np.all(h == 1)

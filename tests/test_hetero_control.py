@@ -1,0 +1,287 @@
+"""Heterogeneous device control (action_space="per_device"): the
+equivalence ladder, the pipelined-decision path, and cost conservation.
+
+The tentpole invariants of docs/ARCHITECTURE.md §13:
+
+* with every device on a *different* ``(h_m, ks_m)``, the masked-step scan
+  keeps loop~batched allclose and batched==sharded BIT-identical at every
+  buildable mesh size, static and gilbert_flaky;
+* the degeneracy pin: homogeneous actions (h_m = max_gap, one ks for all,
+  full batteries) reproduce the pre-§13 shared-space History asdict-equal --
+  i.e. the new action space costs the default path nothing;
+* ``pipeline_decisions=True`` only *re-times* controller work: with a
+  stateless fleet the History is identical, and the pipelined ladder holds
+  end to end;
+* cost conservation: total energy_j / money / time_s / mb spend is the same
+  across all three engines and equals :func:`repro.core.audit
+  .recompute_spend` replayed from the decision log alone -- accounting
+  drift in any engine now fails here instead of skewing BENCH Pareto rows.
+"""
+import dataclasses
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (FLConfig, FixedController, LGCSimulator,
+                        audit_simulator, make_fleet_ddpg, recompute_spend)
+from repro.launch.mesh import make_host_mesh
+from repro.models.paper_models import make_mnist_task
+
+N_DEV = len(jax.devices())
+SHARD_COUNTS = sorted({1, N_DEV})
+M = 8
+
+# every device gets a different (h_m, ks_m): step counts sweep the whole
+# [1, max_gap] range and budgets skew across channels
+HS = [1, 2, 3, 4, 5, 6, 7, 8]
+KSS = [[60, 30, 10], [10, 60, 30], [30, 10, 60], [80, 10, 10],
+       [10, 80, 10], [10, 10, 80], [34, 33, 33], [5, 5, 90]]
+
+_TASK = {}
+
+
+def _task(scn: str):
+    if scn not in _TASK:
+        _TASK[scn] = make_mnist_task("lr", m_devices=M, n_train=1600,
+                                     scenario=scn)
+    return _TASK[scn]
+
+
+def _cfg(scn: str, **kw) -> FLConfig:
+    return FLConfig(rounds=24, eval_every=8, max_gap=8, scenario=scn,
+                    action_space="per_device", **kw)
+
+
+class ScriptedFleet:
+    """Fleet-protocol controller that replays fixed per-device decisions --
+    heterogeneous actions without DDPG nondeterminism in the ladder."""
+
+    def __init__(self, hs, kss):
+        self.m = len(hs)
+        self.hs = list(hs)
+        self.kss = [list(k) for k in kss]
+        self.needs_reward = np.zeros(self.m, bool)
+
+    def act(self, states, mask=None):
+        return np.asarray(self.hs, np.int64), [list(k) for k in self.kss]
+
+    def observe(self, *a, **k):
+        pass
+
+
+def _run(scn: str, engine: str, *, pipeline=False, mesh=None, mode="lgc"):
+    cfg = _cfg(scn, pipeline_decisions=pipeline)
+    sim = LGCSimulator(_task(scn), cfg, ScriptedFleet(HS, KSS), mode=mode,
+                      engine=engine, mesh=mesh)
+    return sim, sim.run()
+
+
+class TestHeteroLadder:
+    @pytest.mark.parametrize("scn", ["static", "gilbert_flaky"])
+    def test_loop_matches_batched(self, scn):
+        _, h_loop = _run(scn, "loop")
+        _, h_bat = _run(scn, "batched")
+        assert h_loop.step == h_bat.step
+        np.testing.assert_allclose(h_bat.loss, h_loop.loss, atol=1e-4)
+        np.testing.assert_allclose(h_bat.accuracy, h_loop.accuracy,
+                                   atol=1e-4)
+        np.testing.assert_allclose(h_bat.uplink_mb, h_loop.uplink_mb,
+                                   atol=1e-4)
+        np.testing.assert_allclose(h_bat.energy_j, h_loop.energy_j,
+                                   rtol=1e-5)
+        np.testing.assert_allclose(h_bat.time_s, h_loop.time_s, rtol=1e-5)
+
+    @pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+    @pytest.mark.parametrize("scn", ["static", "gilbert_flaky"])
+    def test_batched_matches_sharded_bitwise(self, scn, n_shards):
+        """Heterogeneous (h_m, ks_m) shard with the device axis: the
+        masked-step predicate is per-row data, so the shard layout cannot
+        change a single float."""
+        _, h_bat = _run(scn, "batched")
+        _, h_sh = _run(scn, "sharded", mesh=make_host_mesh(n_shards))
+        assert h_sh.asdict() == h_bat.asdict()
+
+    @pytest.mark.parametrize("scn", ["static", "gilbert_flaky"])
+    def test_pipelined_identical_for_stateless_fleet(self, scn):
+        """pipeline_decisions only re-times when the fleet acts/observes;
+        a stateless fleet makes the same decisions either way, so the
+        History must be bitwise unchanged -- on every engine."""
+        for engine in ("loop", "batched"):
+            _, h0 = _run(scn, engine, pipeline=False)
+            _, h1 = _run(scn, engine, pipeline=True)
+            assert h1.asdict() == h0.asdict(), engine
+
+    @pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+    def test_pipelined_sharded_bitwise(self, n_shards):
+        _, h_bat = _run("gilbert_flaky", "batched", pipeline=True)
+        _, h_sh = _run("gilbert_flaky", "sharded", pipeline=True,
+                       mesh=make_host_mesh(n_shards))
+        assert h_sh.asdict() == h_bat.asdict()
+
+    @pytest.mark.parametrize("pipeline", [False, True])
+    @pytest.mark.parametrize("engine", ["loop", "batched", "sharded"])
+    def test_homogeneous_degeneracy_pin(self, engine, pipeline):
+        """h_m = max_gap for all devices makes the per_device window the
+        shared window: the History must equal the pre-§13 shared path
+        asdict-exactly (the ladder's bitwise anchor for the refactor)."""
+        scn = "gilbert_flaky"
+        ks = [60, 30, 30]
+        shared_cfg = FLConfig(rounds=24, eval_every=8, max_gap=8,
+                              scenario=scn)
+        ctrls = [FixedController(8, ks) for _ in range(M)]
+        h_shared = LGCSimulator(_task(scn), shared_cfg, ctrls, mode="lgc",
+                                engine=engine).run()
+        pd_cfg = _cfg(scn, pipeline_decisions=pipeline)
+        ctrls = [FixedController(8, ks) for _ in range(M)]
+        h_pd = LGCSimulator(_task(scn), pd_cfg, ctrls, mode="lgc",
+                            engine=engine).run()
+        assert h_pd.asdict() == h_shared.asdict()
+
+    def test_heterogeneous_h_changes_compute_not_sync(self):
+        """Devices with small h_m really do idle: same sync cadence (all
+        sync each max_gap rounds), lower compute energy than full-steppers
+        with the same profile."""
+        sim, _ = _run("static", "batched")
+        commits = {}
+        for (t, m, h, ks) in sim.decision_log:
+            commits.setdefault(m, []).append((t, h))
+        for m in range(M):
+            ts = [t for t, _h in commits[m]]
+            assert ts == list(range(0, 24 + 1, 8))[: len(ts)]
+            assert all(h == HS[m] for _t, h in commits[m])
+        # compute energy scales with h_m and ONLY h_m: re-pricing device 0's
+        # log with h=8 instead of h=1 must add exactly (8-1) steps x
+        # comp_j_per_step x (3 completed windows) -- comm costs untouched
+        rec = recompute_spend(sim.cfg, sim.mode, sim.d, sim.decision_log,
+                              M, profiles=sim.profiles)
+        fat = [(t, m, 8 if m == 0 else h, ks)
+               for (t, m, h, ks) in sim.decision_log]
+        rec8 = recompute_spend(sim.cfg, sim.mode, sim.d, fat, M,
+                               profiles=sim.profiles)
+        gap = rec8[0]["energy_j"] - rec[0]["energy_j"]
+        assert gap == pytest.approx(
+            (8 - HS[0]) * sim.profiles[0].comp_j_per_step * 3)
+        assert rec8[0]["mb"] == rec[0]["mb"]
+
+
+class TestCostConservation:
+    @pytest.mark.parametrize("scn", ["static", "gilbert_flaky"])
+    def test_ledger_matches_decision_log_replay(self, scn):
+        """Every engine's live spend ledger equals the audit recompute from
+        (config, decision log) alone: EXACT for the loop engine (identical
+        host float path), f32-ulp-tight for the in-program engines (their
+        fused window cost sums differ from the eager channel math by
+        FMA/reassociation only)."""
+        for engine in ("loop", "batched", "sharded"):
+            sim, _ = _run(scn, engine)
+            rec, live = audit_simulator(sim)
+            if engine == "loop":
+                assert rec == live
+                continue
+            for m in range(M):
+                for k in ("energy_j", "money", "time_s", "mb"):
+                    assert math.isclose(rec[m][k], live[m][k],
+                                        rel_tol=1e-6, abs_tol=1e-12), (
+                        engine, m, k)
+
+    def test_totals_identical_across_engines(self):
+        """Cross-engine conservation: the three engines bill the same
+        totals for the same decisions (batched==sharded bitwise; the loop
+        engine to float tolerance of the f32 channel math)."""
+        sims = {e: _run("gilbert_flaky", e)[0]
+                for e in ("loop", "batched", "sharded")}
+        sp = {e: s.spend for e, s in sims.items()}
+        assert sp["batched"] == sp["sharded"]
+        for m in range(M):
+            for k in ("energy_j", "money", "time_s", "mb"):
+                assert math.isclose(sp["loop"][m][k], sp["batched"][m][k],
+                                    rel_tol=1e-6), (m, k)
+        logs = {e: s.decision_log for e, s in sims.items()}
+        assert logs["loop"] == logs["batched"] == logs["sharded"]
+
+    def test_shared_space_ddpg_audits_clean(self):
+        """The auditor also covers the shared action space with a learning
+        fleet (heterogeneous next_sync windows, DDPG-chosen budgets)."""
+        task = _task("gilbert_flaky")
+        cfg = FLConfig(rounds=20, eval_every=10, max_gap=6,
+                       scenario="gilbert_flaky")
+        fleet = make_fleet_ddpg(M, 7850, h_max=6, seed=3)
+        sim = LGCSimulator(task, cfg, fleet, mode="lgc", engine="batched")
+        sim.run()
+        rec, live = audit_simulator(sim)
+        for m in range(M):
+            for k in ("energy_j", "money", "time_s", "mb"):
+                assert math.isclose(rec[m][k], live[m][k],
+                                    rel_tol=1e-6, abs_tol=1e-12), (m, k)
+
+    @pytest.mark.parametrize("mode", ["topk", "lgc_q8", "fedavg"])
+    def test_other_modes_audit_clean(self, mode):
+        """The byte accounting differs per mode (folded budgets, int8
+        values, dense best-channel) -- the replay must price each the same
+        way the engines do."""
+        sim, _ = _run("gilbert_flaky", "batched", mode=mode)
+        rec, live = audit_simulator(sim)
+        for m in range(M):
+            for k in ("energy_j", "money", "time_s", "mb"):
+                assert math.isclose(rec[m][k], live[m][k],
+                                    rel_tol=1e-6, abs_tol=1e-12), (m, k)
+
+    def test_tampered_log_fails_audit(self):
+        """The property has teeth: perturbing one logged decision breaks
+        the ledger match."""
+        sim, _ = _run("gilbert_flaky", "batched")
+        t, m, h, ks = sim.decision_log[0]
+        bad = list(sim.decision_log)
+        bad[0] = (t, m, h, tuple(k + 8 for k in ks))
+        rec = recompute_spend(sim.cfg, sim.mode, sim.d, bad, M,
+                              profiles=sim.profiles)
+        assert any(rec[m][k] != sim.spend[m][k]
+                   for k in ("energy_j", "mb"))
+
+
+class TestHeteroFleetScenario:
+    def test_profiles_skewed_and_shard_independent(self):
+        from repro.core import get_scenario
+        scn = get_scenario("hetero_fleet")
+        profs = scn.device_profiles(M)
+        batteries = [p.battery for p in profs]
+        mults = [p.comp_time_per_step_s / profs[0].comp_time_per_step_s
+                 for p in profs]
+        assert len(set(batteries)) > 1 and len(set(round(m, 3)
+                                                   for m in mults)) > 1
+        # cycled by global id: device i and i + len(ladder) share traits
+        period = len(scn.hetero.batteries)
+        assert batteries[0] == batteries[0 + period]
+        assert mults[1] == mults[1 + period]
+        # the weak tail exists: at least one device's battery clamp bites
+        # below h_max=4 (cap = 1 + floor(soc * 3) < 4 needs soc < 1)
+        assert min(batteries) < 1.0
+
+    @pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+    def test_hetero_fleet_ladder(self, n_shards):
+        """The new registry scenario rides the per_device ladder: skewed
+        profiles reach the observation vector and the cost model without
+        breaking batched==sharded bitwise."""
+        _, h_bat = _run("hetero_fleet", "batched", pipeline=True)
+        _, h_sh = _run("hetero_fleet", "sharded", pipeline=True,
+                       mesh=make_host_mesh(n_shards))
+        assert h_sh.asdict() == h_bat.asdict()
+
+    def test_per_device_ddpg_end_to_end(self):
+        """A real per_device DDPG fleet on hetero_fleet: profile-augmented
+        observations flow, battery clamps bind, and the run learns
+        something (loss drops) while logging per-device decisions."""
+        task = _task("hetero_fleet")
+        cfg = _cfg("hetero_fleet", pipeline_decisions=True)
+        fleet = make_fleet_ddpg(M, 7850, action_space="per_device", seed=1)
+        sim = LGCSimulator(task, cfg, fleet, mode="lgc", engine="batched")
+        hist = sim.run()
+        assert hist.loss[-1] < hist.loss[0]
+        # the battery clamp binds: devices on the weak-tail traits (battery
+        # 0.7 / 0.67) may never exceed their 1 + floor(soc * 7) step cap
+        for (t, m, h, ks) in sim.decision_log:
+            cap = 1 + int(np.floor(sim.profiles[m].battery * 7))
+            assert 1 <= h <= cap, (m, h, cap)
+            assert sum(ks) <= fleet.cfg.k_total_max
